@@ -1,0 +1,96 @@
+"""Fig 7/8/9 reproduction: scalability of RGC / Quantized-RGC vs dense
+allreduce, via the paper's cost model (Eq 1 / Eq 2, §5.5) extended with the
+§5.6 overlap rules and a per-message decompression launch overhead (the
+paper's Fig 10 "unpack" term that dominates ResNet50 at 128 GPUs).
+
+Per-iteration model:
+  compute   t_comp = 3 * fwd_GFlop * batch / (14 TFLOP/s * 33% MFU)
+  dense     comm = Eq 2; CNNs overlap layer-wise with backprop (§5.6) ->
+            hidden = min(comm, 0.9 * t_comp); LSTM (BPTT) hides nothing.
+  RGC       select+pack (not hideable) + Eq 1 bandwidth term (hideable for
+            CNNs) + unpack = p * (n_layers * launch + M*D*gamma1)
+            (never hideable: happens after the gather).
+
+Claims validated (paper §6.4):
+  * VGG16 / AlexNet / LSTM speed up (1.4x-2x+ at paper scales).
+  * ResNet50 shows NO gain at 128 GPUs (paper: 0.66x-0.94x) — killed by
+    per-message unpack overhead across its ~50 small compressed layers.
+  * weak-scaling efficiency of RGC declines with p (concave Fig 7 curves):
+    bandwidth (p-1)*M*D and unpack p*gamma1 grow linearly in p.
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import MURADIN, PIZ_DAINT, t_dense
+
+# (name, model MB, fwd GFlop/sample, batch/node, compressed layer count)
+MODELS = {
+    "alexnet": (233, 0.72, 32, 8),
+    "vgg16": (528, 15.5, 32, 16),
+    "resnet50": (103, 8.22, 32, 50),
+    "lstm-ptb": (264, 2.52, 5, 4),
+}
+GPU_FLOPS_EFF = 14e12 * 0.33
+T_SELECT_PER_LAYER = 2e-4        # Fig 3 scale: trimmed top-k on GPU
+UNPACK_LAUNCH = 1e-5             # per gathered message scatter-add launch
+
+
+def step_time(name: str, p: int, mode: str, net, density=0.001) -> float:
+    size_mb, gflop, bs, n_layers = MODELS[name]
+    m = size_mb * 1024 * 1024 // 4
+    t_comp = 3 * gflop * 1e9 * bs / GPU_FLOPS_EFF
+    cnn = name != "lstm-ptb"
+
+    if mode == "dense":
+        comm = t_dense(p, m, net)
+        hidden = min(comm, 0.9 * t_comp) if cnn else 0.0
+        return t_comp + comm - hidden
+
+    t_select = n_layers * T_SELECT_PER_LAYER
+    wire_elems = m * density * (1.0 if mode == "quant" else 2.0)
+    t_bw = (p - 1) * wire_elems * net.beta
+    hidden = min(t_bw, 0.9 * t_comp) if cnn else 0.0
+    t_unpack = p * (n_layers * UNPACK_LAUNCH + m * density * net.gamma1)
+    return t_comp + t_select + (t_bw - hidden) + t_unpack
+
+
+def speedup_vs_dense(name: str, p: int, mode: str, net) -> float:
+    return step_time(name, p, "dense", net) / step_time(name, p, mode, net)
+
+
+def run(net=PIZ_DAINT, ps=(2, 4, 8, 16, 32, 64, 128)):
+    rows = []
+    for name in MODELS:
+        for p in ps:
+            rows.append({
+                "model": name, "p": p, "net": net.name,
+                "speedup_rgc": speedup_vs_dense(name, p, "rgc", net),
+                "speedup_quant": speedup_vs_dense(name, p, "quant", net),
+            })
+    return rows
+
+
+def main(quick: bool = False):
+    print("fig7_scalability: modeled RGC speedup vs dense (Eq1/Eq2 + §5.6)")
+    print("model,p,net,speedup_rgc,speedup_quant")
+    for net in (PIZ_DAINT, MURADIN):
+        for r in run(net=net):
+            print(f"{r['model']},{r['p']},{r['net']},"
+                  f"{r['speedup_rgc']:.3f},{r['speedup_quant']:.3f}")
+    # paper §6.4 claims
+    assert speedup_vs_dense("vgg16", 128, "quant", PIZ_DAINT) > 1.2
+    assert speedup_vs_dense("alexnet", 32, "quant", PIZ_DAINT) > 1.2
+    assert speedup_vs_dense("lstm-ptb", 8, "rgc", PIZ_DAINT) > 1.5
+    assert speedup_vs_dense("resnet50", 128, "quant", PIZ_DAINT) <= 1.05
+    # quantization halves the bandwidth term -> quant >= plain for CNNs
+    assert (speedup_vs_dense("vgg16", 128, "quant", PIZ_DAINT)
+            >= speedup_vs_dense("vgg16", 128, "rgc", PIZ_DAINT))
+    # concave weak-scaling: RGC step time grows with p
+    ts = {p: step_time("lstm-ptb", p, "rgc", PIZ_DAINT)
+          for p in (8, 128, 1024)}
+    assert ts[1024] > ts[128] > ts[8]
+    print("claims: OK (vgg/alexnet/lstm speedup, resnet50 no-gain, "
+          "quant>=rgc, concave scaling)")
+
+
+if __name__ == "__main__":
+    main()

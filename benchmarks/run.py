@@ -1,0 +1,46 @@
+"""Benchmark orchestrator: one module per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is quick mode (CPU-friendly budgets). Each module prints CSV and
+asserts its paper-claim checks; failures propagate as nonzero exit.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (fig3_selection, fig7_scalability, fig10_decomposition,
+                   roofline, tab1_convergence, tab2_batchsize)
+    mods = {
+        "fig3": fig3_selection, "fig7": fig7_scalability,
+        "fig10": fig10_decomposition, "tab1": tab1_convergence,
+        "tab2": tab2_batchsize, "roofline": roofline,
+    }
+    chosen = (args.only.split(",") if args.only else list(mods))
+    failures = []
+    for name in chosen:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            mods[name].main(quick=quick)
+            print(f"[{name}] done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"[{name}] FAILED: {e!r}")
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

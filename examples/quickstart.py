@@ -1,0 +1,32 @@
+"""Quickstart: train a small LM with Residual Gradient Compression.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Single process, CPU-friendly. Shows the three optimizer modes side by
+side on the same model + data budget: dense baseline, RGC (0.1%-style
+sparse sync, here 1% for the tiny model), and quantized RGC.
+"""
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_config
+from repro.data import bigram_batches
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    print(f"model: {cfg.name} (reduced: {cfg.num_layers}L d={cfg.d_model})")
+
+    for optimizer in ("dense", "rgc", "rgc_quant"):
+        tc = TrainConfig(lr=0.3, momentum=0.0, optimizer=optimizer,
+                         density=0.01, local_clip=1.0)
+        trainer = Trainer(cfg, tc)
+        state = trainer.init_state()
+        print(f"\n--- optimizer = {optimizer} ---")
+        trainer.run(state,
+                    bigram_batches(cfg.vocab_size, 8, 64, seed=0),
+                    num_steps=30, log_every=10)
+
+
+if __name__ == "__main__":
+    main()

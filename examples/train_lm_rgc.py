@@ -1,0 +1,78 @@
+"""End-to-end driver (deliverable b): train a ~100M-param LM with RGC on a
+multi-device mesh for a few hundred steps, with warm-up density schedule,
+checkpointing, and held-out evaluation.
+
+    REPRO_HOST_DEVICES=8 PYTHONPATH=src python examples/train_lm_rgc.py \
+        [--steps 300] [--full-size]
+
+Default trains a ~100M-parameter internlm2-family config (12 layers,
+d_model 768) on 8 forced host devices as a (4 data x 2 model) mesh — the
+same nested-shard_map RGC code path the production pod uses.
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    n = os.environ.get("REPRO_HOST_DEVICES", "8")
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_config
+from repro.data import bigram_batches
+from repro.launch.mesh import make_host_mesh
+from repro.train.trainer import Trainer
+
+
+def build_config(full_size: bool):
+    base = get_config("internlm2-1.8b")
+    if full_size:
+        return base
+    # ~100M-parameter variant of the same family
+    return dataclasses.replace(
+        base, num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab_size=8192, dtype=jnp.float32,
+        attn_q_chunk=128, attn_kv_chunk=128, loss_chunk=256)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--density", type=float, default=0.001)
+    ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = build_config(args.full_size)
+    n_dev = len(jax.devices())
+    mesh = make_host_mesh(max(n_dev // 2, 1), 2) if n_dev >= 2 else None
+    tc = TrainConfig(lr=0.1, momentum=0.9, optimizer="rgc",
+                     density=args.density, warmup_steps_per_stage=20,
+                     dense_warmup=True, local_clip=1.0)
+    trainer = Trainer(cfg, tc, mesh=mesh, ckpt_dir=args.ckpt_dir)
+    state = trainer.init_state()
+    n = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"params: {n/1e6:.1f}M  devices: {n_dev}  "
+          f"mesh: {mesh.devices.shape if mesh else None}")
+    print(f"warm-up: dense allreduce for {20 * 4} steps, then "
+          f"D={args.density:.3%} RGC (§5.7 RedSync schedule)")
+
+    t0 = time.time()
+    state = trainer.run(
+        state, bigram_batches(cfg.vocab_size, args.batch, args.seq, seed=0),
+        num_steps=args.steps, log_every=20)
+    dt = time.time() - t0
+    toks = args.steps * args.batch * args.seq
+    print(f"\n{args.steps} steps in {dt:.1f}s "
+          f"({toks / dt:.0f} tok/s on CPU host)")
+    print(f"checkpoint written under {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

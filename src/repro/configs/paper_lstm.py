@@ -1,0 +1,40 @@
+"""The paper's own evaluation model (RedSync §6.2): 2-layer LSTM LM with
+1500 hidden units per layer (Press & Wolf 2016), untied embeddings,
+vanilla SGD + gradient clipping, PTB (vocab 10k) / WikiText-2 (vocab 33k).
+
+Used by the Table 1 / Table 2 / Fig 6 convergence benchmarks and the LSTM
+rows of Fig 7/9 — NOT part of the 10-arch x 4-shape dry-run matrix.
+
+model size: embed 10000x1500 + lstm 2x(4x1500x(1500+1500)) + head
+1500x10000 — dominated by embed/softmax, the paper's high
+communication-to-computation regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+FULL = ModelConfig(
+    name="paper-lstm",
+    family="lstm",
+    num_layers=2,
+    d_model=1500,            # embedding size
+    num_heads=1,
+    num_kv_heads=1,
+    head_dim=1500,
+    d_ff=1500,               # hidden units
+    vocab_size=10_000,       # PTB
+    tie_embeddings=False,
+    dtype=jnp.float32,       # paper trains fp32
+)
+
+WIKI2 = dataclasses.replace(FULL, name="paper-lstm-wiki2", vocab_size=33_278)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        FULL, d_model=64, d_ff=96, head_dim=96, vocab_size=512,
+        loss_chunk=32)

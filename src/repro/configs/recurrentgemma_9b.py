@@ -1,0 +1,41 @@
+"""recurrentgemma-9b [hybrid] — arXiv:2402.19427 (Griffin / RecurrentGemma).
+
+38L, d_model 4096, 16 heads MQA (kv=1, head_dim 256), d_ff 12288,
+vocab 256000. Temporal mix pattern 1 local-attention : 2 RG-LRU
+(superblocks R,R,L), sliding window 2048, lru_width = d_model, causal
+depthwise conv1d width 4. Gemma-style embed scale, tied embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+FULL = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256_000,
+    window_size=2048,
+    layer_pattern=("R", "R", "L"),
+    lru_width=4096,
+    conv1d_width=4,
+    tie_embeddings=True,
+    embed_scale=True,
+    act="gelu",
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        FULL, num_layers=5, d_model=128, num_heads=4, num_kv_heads=1,
+        head_dim=32, d_ff=256, vocab_size=512, window_size=16,
+        lru_width=128, dtype=jnp.float32,
+        attn_q_chunk=16, attn_kv_chunk=16, loss_chunk=32)

@@ -1,0 +1,36 @@
+"""rwkv6-3b [ssm] — arXiv:2404.05892 (Eagle & Finch; "Finch" = RWKV6).
+
+32L, d_model 2560 (attention-free; 40 wkv heads of dim 64), channel-mix
+d_ff 8960, vocab 65536. Data-dependent decay + ddlerp token shift
+(low-rank dim 32). Sub-quadratic by construction -> long_500k runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+FULL = ModelConfig(
+    name="rwkv6-3b",
+    family="rwkv6",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,            # d_model / rwkv_head_dim
+    num_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65_536,
+    rwkv_head_dim=64,
+    lora_dim=32,
+    tie_embeddings=False,
+    wkv_chunk=64,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        FULL, num_layers=2, d_model=128, num_heads=8, num_kv_heads=8,
+        head_dim=16, d_ff=256, vocab_size=512, rwkv_head_dim=16,
+        lora_dim=8, dtype=jnp.float32, wkv_chunk=8, loss_chunk=32)

@@ -1,0 +1,16 @@
+"""RedSync core: residual gradient compression, sparse sync, cost model."""
+from .cost_model import (NetworkModel, PRESETS, choose_method, speedup,
+                         t_dense, t_sparse)
+from .rgc import RGCConfig, rgc_apply, rgc_init
+from .schedule import DensitySchedule
+from .selection import (Selected, exact_topk, exact_topk_quant,
+                        threshold_binary_search, threshold_binary_search_quant,
+                        threshold_filter, trimmed_topk, trimmed_topk_quant)
+
+__all__ = [
+    "NetworkModel", "PRESETS", "choose_method", "speedup", "t_dense",
+    "t_sparse", "RGCConfig", "rgc_apply", "rgc_init", "DensitySchedule",
+    "Selected", "exact_topk", "exact_topk_quant", "threshold_binary_search",
+    "threshold_binary_search_quant", "threshold_filter", "trimmed_topk",
+    "trimmed_topk_quant",
+]

@@ -1,0 +1,98 @@
+"""RedSync communication cost model (§5.5, Appendix B).
+
+    T_sparse = T_select + lg(p)·α + (p−1)·M·D·β + p·γ₁          (Eq 1)
+    T_dense  = 2·lg(p)·α + 2·(p−1)/p·M·β + (p−1)/p·γ₂           (Eq 2)
+
+α: per-message latency [s]; β: transfer time per element [s/elem]
+(β = elem_bytes / link bandwidth); γ₁: per-node decompress cost for a
+size-M message; γ₂: dense reduction cost for a size-M message.
+
+The model drives two things:
+  * ``choose_method`` — the paper's per-layer dispatch (<128 KB dense
+    allreduce; 128 KB–4 MB trimmed top-k; >4 MB sampled binary search).
+  * the Fig 7/8/9 scalability projections in benchmarks/.
+
+Hardware presets include the paper's two testbeds and our TPU v5e target.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class NetworkModel:
+    """α/β/γ parameters for one interconnect + accelerator pairing."""
+    name: str
+    alpha: float          # latency per message [s]
+    bandwidth: float      # bytes/s effective allreduce/allgather bandwidth
+    gamma1: float         # decompress (scatter-add) [s per message element]
+    gamma2: float         # dense reduce [s per element]
+    elem_bytes: int = 4   # f32 wire format
+
+    @property
+    def beta(self) -> float:
+        return self.elem_bytes / self.bandwidth
+
+
+# The paper's testbeds (§6.1: Muradin 3.5 GB/s, Piz Daint 1.5 GB/s) and the
+# TPU v5e target (~50 GB/s/link ICI). γ values follow the paper's observation
+# that decompression runs at a fraction of HBM bandwidth for small messages.
+MURADIN = NetworkModel("muradin-8xTitanV", alpha=10e-6, bandwidth=3.5e9,
+                       gamma1=2e-11, gamma2=5e-12)
+PIZ_DAINT = NetworkModel("piz-daint-P100", alpha=15e-6, bandwidth=1.5e9,
+                         gamma1=2e-11, gamma2=5e-12)
+TPU_V5E = NetworkModel("tpu-v5e-ici", alpha=1e-6, bandwidth=50e9,
+                       gamma1=5e-12, gamma2=1.2e-12)
+
+PRESETS = {m.name: m for m in (MURADIN, PIZ_DAINT, TPU_V5E)}
+
+
+def t_sparse(p: int, m: int, density: float, net: NetworkModel,
+             t_select: float = 0.0, quantized: bool = False) -> float:
+    """Eq 1. ``m`` in elements. Quantization halves the value payload
+    (indices + one scalar instead of indices + values)."""
+    payload = m * density * (1.0 if quantized else 2.0) / 2.0
+    # payload above is in "index+value pairs" halves: full message is
+    # k indices + k values (2k elems); quantized is k indices + 1 (~k elems).
+    wire_elems = m * density * (1.0 if quantized else 2.0)
+    del payload
+    return (t_select
+            + math.log2(max(p, 2)) * net.alpha
+            + (p - 1) * wire_elems * net.beta
+            + p * (m * density) * net.gamma1)
+
+
+def t_dense(p: int, m: int, net: NetworkModel) -> float:
+    """Eq 2 (Rabenseifner allreduce)."""
+    return (2 * math.log2(max(p, 2)) * net.alpha
+            + 2 * (p - 1) / p * m * net.beta
+            + (p - 1) / p * m * net.gamma2)
+
+
+def speedup(p: int, m: int, density: float, net: NetworkModel,
+            t_select: float = 0.0, quantized: bool = False) -> float:
+    return t_dense(p, m, net) / t_sparse(p, m, density, net, t_select, quantized)
+
+
+def bandwidth_ratio(p: int, density: float) -> float:
+    """Paper's §5.5 observation: sparse/dense *bandwidth-term* ratio is
+    (p−1)·D / (2·(p−1)/p) = p·D/2 — model compression ≠ wire compression.
+    With p=128, D=0.1% → 6.4% (12.8% for unquantized idx+val messages)."""
+    return (p - 1) * density / (2 * (p - 1) / p)
+
+
+# --- the paper's per-layer method dispatch (§5.5 last paragraph) -----------
+
+DENSE_THRESHOLD_BYTES = 128 * 1024        # below: dense allreduce
+TRIMMED_THRESHOLD_BYTES = 4 * 1024 * 1024  # below: trimmed top-k; above: bsearch
+
+
+def choose_method(param_bytes: int,
+                  dense_threshold: int = DENSE_THRESHOLD_BYTES,
+                  trimmed_threshold: int = TRIMMED_THRESHOLD_BYTES) -> str:
+    if param_bytes < dense_threshold:
+        return "dense"
+    if param_bytes < trimmed_threshold:
+        return "trimmed_topk"
+    return "threshold_binary_search"

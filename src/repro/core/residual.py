@@ -1,0 +1,92 @@
+"""Residual + momentum state for RGC (RedSync §5.7, Algorithm 4).
+
+Per compressed leaf we keep:
+  * ``residual``  V — locally accumulated un-communicated updates (f32)
+  * ``momentum``  U — momentum-corrected velocity (f32); for *dense* (small)
+                  leaves this doubles as the ordinary optimizer momentum
+  * ``threshold`` — cached binary-search threshold (sampled variant, §5.2.2)
+  * ``phase``     — top/bottom alternation for quantization (§5.2.3)
+  * ``interval``  — iterations since the threshold was last refreshed
+
+Momentum correction & momentum factor masking follow Lin et al. (2017) as
+adopted by Alg 4 lines 8–23: velocity and residual accumulate *locally*, and
+both are cleared at communicated coordinates.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LeafState(NamedTuple):
+    residual: jax.Array    # f32 param-shaped
+    momentum: jax.Array    # f32 param-shaped
+    threshold: jax.Array   # f32 scalar
+    phase: jax.Array       # i32 scalar
+    interval: jax.Array    # i32 scalar
+
+
+def init_leaf(param: jax.Array, *, momentum: bool = True,
+              residual_dtype=jnp.float32) -> LeafState:
+    """``momentum=False`` (vanilla-SGD RGC, the paper's LSTM runs) stores a
+    scalar placeholder instead of a param-shaped velocity — halves RGC state
+    memory. ``residual_dtype=bf16`` is the large-model memory adaptation
+    (recorded per arch in EXPERIMENTS.md when used)."""
+    v = jnp.zeros(param.shape, residual_dtype)
+    u = jnp.zeros(param.shape, jnp.float32) if momentum else jnp.float32(0.0)
+    return LeafState(v, u, jnp.float32(0.0), jnp.int32(0), jnp.int32(0))
+
+
+def accumulate(
+    grad: jax.Array,
+    param: jax.Array,
+    state: LeafState,
+    *,
+    momentum: float,
+    nesterov: bool,
+    weight_decay: float,
+) -> LeafState:
+    """Alg 4 lines 8–19: weight decay, momentum correction, residual add."""
+    g = grad.astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * param.astype(jnp.float32)
+    r = state.residual.astype(jnp.float32)
+    if momentum:
+        u = momentum * state.momentum + g
+        v = r + u
+        if nesterov:
+            v = v + g
+    else:
+        u = state.momentum
+        v = r + g
+    return state._replace(residual=v.astype(state.residual.dtype),
+                          momentum=u)
+
+
+def mask_communicated(
+    state: LeafState, indices: jax.Array, *, momentum: bool
+) -> LeafState:
+    """Alg 4 lines 21–23: clear V (and U) at communicated coordinates.
+
+    ``indices`` may contain the padding sentinel (== size); 'drop' mode
+    ignores those entries.
+    """
+    flat_v = state.residual.reshape(-1)
+    v = flat_v.at[indices].set(0.0, mode="drop").reshape(state.residual.shape)
+    if momentum:
+        flat_u = state.momentum.reshape(-1)
+        u = flat_u.at[indices].set(0.0, mode="drop").reshape(state.momentum.shape)
+    else:
+        u = state.momentum
+    return state._replace(residual=v, momentum=u)
+
+
+def local_clip_scale(grads_sq_sum: jax.Array, clip_norm: float,
+                     num_workers: int) -> jax.Array:
+    """DGC local gradient clipping (§5.6): clip the *local* gradient to
+    N^{-1/2} of the global threshold before residual accumulation."""
+    norm = jnp.sqrt(grads_sq_sum)
+    limit = clip_norm / jnp.sqrt(jnp.float32(num_workers))
+    return jnp.minimum(1.0, limit / jnp.maximum(norm, 1e-12))

@@ -1,0 +1,42 @@
+"""Warm-up density schedule (RedSync §5.7).
+
+The paper's recommendation: exponentially decay density over the first
+epochs — 25%, 6.25%, 1.5625%, 0.4%, then the target (0.1%). RedSync's own
+improvement for large scale: replace the high-density warm-up stages with
+plain dense-allreduce SGD (density 1.0 sentinel), because even 1.56% density
+saturates the dense bandwidth at p=64 (§5.7).
+
+Density is *static per compiled step* (message capacity is a trace-time
+shape), so the trainer recompiles at stage boundaries — 5 compilations total.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+DGC_WARMUP = (0.25, 0.0625, 0.015625, 0.004)
+
+
+@dataclass(frozen=True)
+class DensitySchedule:
+    """Piecewise-constant density over training steps."""
+    target: float = 0.001
+    warmup_steps_per_stage: int = 0
+    stages: tuple[float, ...] = DGC_WARMUP
+    dense_warmup: bool = False   # RedSync large-scale variant (§5.7)
+
+    def density_at(self, step: int) -> float:
+        if self.warmup_steps_per_stage <= 0:
+            return self.target
+        stage = step // self.warmup_steps_per_stage
+        if stage >= len(self.stages):
+            return self.target
+        if self.dense_warmup:
+            return 1.0           # sentinel: use dense allreduce this stage
+        return self.stages[stage]
+
+    def boundaries(self) -> list[int]:
+        if self.warmup_steps_per_stage <= 0:
+            return []
+        return [self.warmup_steps_per_stage * (i + 1)
+                for i in range(len(self.stages))]

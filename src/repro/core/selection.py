@@ -1,0 +1,237 @@
+"""Communication-set selection (RedSync §5.2, Algorithms 2/3/5).
+
+All selectors operate on a flat f32 residual vector and return a
+fixed-capacity sparse message ``Selected(indices, values, count)``:
+
+* ``exact_topk``       — radixSelect stand-in (``jax.lax.top_k``); the paper's
+                         baseline selector. capacity == k.
+* ``trimmed_topk``     — Alg 2: statistics-guided threshold trimming, then an
+                         exact top-k restricted to survivors. capacity == k.
+* ``threshold_binary_search`` — Alg 3: binary-search a threshold t with
+                         k <= nnz(|x|>t) <= 2k; no exact top-k at all.
+                         capacity == 2k, padded; true length in ``count``.
+
+Quantized variants (§5.2.3) select by *signed value* (top-k one iteration,
+bottom-k the next — the ``phase`` argument) so the communication set is
+same-signed and a single scalar mean represents all values.
+
+JAX constraint: shapes are static, so capacity is fixed at trace time. Padding
+uses index == size (out of range); decompression drops padded entries via the
+``count`` header, mirroring the paper's ``(len, idx, val)`` packed message.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Selected(NamedTuple):
+    """Fixed-capacity sparse communication set."""
+    indices: jax.Array   # i32[cap], padded entries == x.size
+    values: jax.Array    # f32[cap] (zeros at padding)
+    count: jax.Array     # i32[] true number of selected elements (<= cap)
+
+
+def _stats(ax: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """mean and max of a non-negative vector (|x|)."""
+    return jnp.mean(ax), jnp.max(ax)
+
+
+def _pad_topk(x: jax.Array, score: jax.Array, k: int) -> Selected:
+    """Exact top-k by ``score``; values taken from ``x``."""
+    _, idx = jax.lax.top_k(score, k)
+    return Selected(idx.astype(jnp.int32), x[idx], jnp.int32(k))
+
+
+# ---------------------------------------------------------------------------
+# Baseline: exact top-k (the "radixSelect" reference point)
+# ---------------------------------------------------------------------------
+
+def exact_topk(x: jax.Array, k: int) -> Selected:
+    return _pad_topk(x, jnp.abs(x), k)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: trimmed top-k
+# ---------------------------------------------------------------------------
+
+def trimmed_topk(x: jax.Array, k: int, eps: float = 0.2) -> Selected:
+    """Find a threshold that keeps >=k survivors, then top-k the survivors.
+
+    Survivor restriction is expressed by zeroing the score of trimmed
+    elements; on TPU the survivor set is first compacted into a small buffer
+    by the Pallas block-bucketed compaction kernel (kernels/compact.py), which
+    is where the paper's speedup comes from. The selected set is identical.
+    """
+    ax = jnp.abs(x)
+    mean, mx = _stats(ax)
+
+    def cond(state):
+        ratio, nnz = state
+        return jnp.logical_and(nnz < k, ratio > 0.0)
+
+    def body(state):
+        ratio, _ = state
+        ratio = ratio - eps
+        thr = mean + ratio * (mx - mean)
+        return ratio, jnp.sum(ax > thr)
+
+    ratio0 = 1.0 - eps
+    nnz0 = jnp.sum(ax > mean + ratio0 * (mx - mean))
+    ratio, _ = jax.lax.while_loop(cond, body, (jnp.float32(ratio0), nnz0))
+    thr = mean + ratio * (mx - mean)
+    trimmed_score = jnp.where(ax > thr, ax, 0.0)
+    return _pad_topk(x, trimmed_score, k)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3: threshold binary search selection
+# ---------------------------------------------------------------------------
+
+def threshold_binary_search(
+    x: jax.Array,
+    k: int,
+    eps: float = 1e-3,
+    threshold: jax.Array | None = None,
+) -> tuple[Selected, jax.Array]:
+    """Binary-search a threshold t with k <= nnz(|x|>t) <= 2k.
+
+    Returns the selection *and* the threshold so callers can implement the
+    paper's "sampled" variant (reuse the threshold for the next `interval`
+    iterations via ``threshold_filter``). capacity == 2k.
+    """
+    ax = jnp.abs(x)
+    mean, mx = _stats(ax)
+
+    def cond(state):
+        l, r, nnz = state
+        done = jnp.logical_and(nnz >= k, nnz <= 2 * k)
+        return jnp.logical_and(~done, (r - l) > eps)
+
+    def body(state):
+        l, r, _ = state
+        ratio = l + (r - l) / 2.0
+        thr = mean + ratio * (mx - mean)
+        nnz = jnp.sum(ax > thr)
+        # nnz too small -> threshold too high -> move right bound down
+        r = jnp.where(nnz < k, ratio, r)
+        l = jnp.where(nnz > 2 * k, ratio, l)
+        return l, r, nnz
+
+    l, r, _ = jax.lax.while_loop(
+        cond, body, (jnp.float32(0.0), jnp.float32(1.0), jnp.int32(-1))
+    )
+    ratio = l + (r - l) / 2.0
+    thr = mean + ratio * (mx - mean)
+    if threshold is not None:  # pragma: no cover - convenience branch
+        thr = threshold
+    return threshold_filter(x, thr, capacity=2 * k), thr
+
+
+def threshold_filter(x: jax.Array, threshold: jax.Array, capacity: int) -> Selected:
+    """All elements with |x| > threshold, first-`capacity`, padded (Alg 5 L40)."""
+    ax = jnp.abs(x)
+    mask = ax > threshold
+    nnz = jnp.sum(mask)
+    (idx,) = jnp.nonzero(mask, size=capacity, fill_value=x.size)
+    safe = jnp.minimum(idx, x.size - 1)
+    vals = jnp.where(idx < x.size, x[safe], 0.0)
+    return Selected(idx.astype(jnp.int32), vals, jnp.minimum(nnz, capacity))
+
+
+# ---------------------------------------------------------------------------
+# Quantized variants (§5.2.3): same-signed communication sets
+# ---------------------------------------------------------------------------
+
+def _signed_score(x: jax.Array, phase: jax.Array) -> jax.Array:
+    """Score for alternating top/bottom selection.
+
+    phase == 0 -> select largest values (positives); phase == 1 -> most
+    negative values. Elements of the wrong sign get score 0 so they are never
+    selected ahead of a same-signed element.
+    """
+    y = jnp.where(phase == 0, x, -x)
+    return jnp.maximum(y, 0.0)
+
+
+def exact_topk_quant(x: jax.Array, k: int, phase: jax.Array) -> Selected:
+    score = _signed_score(x, phase)
+    sel = _pad_topk(x, score, k)
+    return _quantize(sel, x.size)
+
+
+def trimmed_topk_quant(
+    x: jax.Array, k: int, phase: jax.Array, eps: float = 0.2
+) -> Selected:
+    score = _signed_score(x, phase)
+    mean, mx = _stats(score)
+
+    def cond(state):
+        ratio, nnz = state
+        return jnp.logical_and(nnz < k, ratio > 0.0)
+
+    def body(state):
+        ratio, _ = state
+        ratio = ratio - eps
+        return ratio, jnp.sum(score > mean + ratio * (mx - mean))
+
+    ratio0 = 1.0 - eps
+    nnz0 = jnp.sum(score > mean + ratio0 * (mx - mean))
+    ratio, _ = jax.lax.while_loop(cond, body, (jnp.float32(ratio0), nnz0))
+    thr = mean + ratio * (mx - mean)
+    sel = _pad_topk(x, jnp.where(score > thr, score, 0.0), k)
+    return _quantize(sel, x.size)
+
+
+def threshold_binary_search_quant(
+    x: jax.Array, k: int, phase: jax.Array, eps: float = 1e-3
+) -> Selected:
+    """Binary-search variant on the signed score, then quantize.
+
+    The paper notes threshold *sharing* is incompatible with quantization
+    (the sign phase alternates every iteration), so no threshold is returned.
+    """
+    score = _signed_score(x, phase)
+    mean, mx = _stats(score)
+
+    def cond(state):
+        l, r, nnz = state
+        done = jnp.logical_and(nnz >= k, nnz <= 2 * k)
+        return jnp.logical_and(~done, (r - l) > eps)
+
+    def body(state):
+        l, r, _ = state
+        ratio = l + (r - l) / 2.0
+        thr = mean + ratio * (mx - mean)
+        nnz = jnp.sum(score > thr)
+        r = jnp.where(nnz < k, ratio, r)
+        l = jnp.where(nnz > 2 * k, ratio, l)
+        return l, r, nnz
+
+    l, r, _ = jax.lax.while_loop(
+        cond, body, (jnp.float32(0.0), jnp.float32(1.0), jnp.int32(-1))
+    )
+    thr = mean + (l + (r - l) / 2.0) * (mx - mean)
+    mask = score > thr
+    nnz = jnp.sum(mask)
+    (idx,) = jnp.nonzero(mask, size=2 * k, fill_value=x.size)
+    safe = jnp.minimum(idx, x.size - 1)
+    vals = jnp.where(idx < x.size, x[safe], 0.0)
+    sel = Selected(idx.astype(jnp.int32), vals, jnp.minimum(nnz, 2 * k))
+    return _quantize(sel, x.size)
+
+
+def _quantize(sel: Selected, size: int) -> Selected:
+    """Replace per-element values by their mean (broadcast at decompression).
+
+    The mean is stored in values[0]; the rest of the value payload is unused
+    on the wire (sync.py transmits only (count, indices, mean) for quantized
+    messages). Values here are reconstructed dense so masking/decompression
+    code paths stay uniform.
+    """
+    valid = sel.indices < size
+    denom = jnp.maximum(sel.count, 1).astype(jnp.float32)
+    mean = jnp.sum(jnp.where(valid, sel.values, 0.0)) / denom
+    return Selected(sel.indices, jnp.where(valid, mean, 0.0), sel.count)

@@ -1,0 +1,1 @@
+from .synthetic import SyntheticLM, bigram_batches

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for RedSync's compression hot spots.
+
+Validated in interpret mode on CPU; TPU is the lowering target.
+"""
+from . import ops, ref

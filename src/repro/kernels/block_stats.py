@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused |x| sum+max reduction (Alg 2/3 statistics).
+
+Single pass over the residual in VMEM-sized blocks; the sequential TPU grid
+accumulates into a (1,1) output block (constant index_map) — the TPU idiom
+replacing a GPU two-level tree reduction. mean = sum / n is formed by the
+caller (ops.py) so padding contributes nothing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, sum_ref, max_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[0, 0] = 0.0
+        max_ref[0, 0] = 0.0
+
+    ax = jnp.abs(x_ref[...].astype(jnp.float32))
+    sum_ref[0, 0] += jnp.sum(ax)
+    max_ref[0, 0] = jnp.maximum(max_ref[0, 0], jnp.max(ax))
+
+
+def abs_sum_max(x2d: jax.Array, *, interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x2d: [nb, block] (pre-padded with zeros). Returns (sum|x|, max|x|)."""
+    nb, block = x2d.shape
+    s, m = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d)
+    return s[0, 0], m[0, 0]

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: block-bucketed stream compaction (DESIGN.md §2).
+
+GPU RedSync compacts survivors (|x| > t) with a device-wide prefix sum +
+scattered writes. TPU has neither warp scatter nor cheap global prefix sums,
+so we restructure:
+
+  * each VMEM block packs its own survivors to the front of a PRIVATE
+    ``cap_per_block`` bucket — no cross-block carry at all;
+  * within the block, target slots come from an inclusive ``cumsum`` over the
+    survivor mask (VPU), and the pack itself is a **one-hot matmul on the
+    MXU**: ``out[c] = Σ_b x[b]·onehot[b,c]`` — scatter re-expressed as GEMM;
+  * per-block survivor counts are emitted so the caller can (a) detect bucket
+    overflow and (b) compute the global nnz with one small reduction.
+
+The resulting [nb, cap] buckets are a short array that the caller top-k's or
+filters exactly (Alg 2's "top-k on the trimmed remainder"), at ~D·n cost.
+
+Indices are packed with an i32 where-reduce on the VPU rather than the MXU
+matmul: f32 mantissas (2^24) cannot hold indices of multi-hundred-MB shards.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(thr_ref, x_ref, vals_ref, idx_ref, cnt_ref, *, block: int,
+            cap: int, total: int):
+    i = pl.program_id(0)
+    x = x_ref[...].reshape(block).astype(jnp.float32)
+    gidx = i * block + jax.lax.iota(jnp.int32, block)
+    mask = (jnp.abs(x) > thr_ref[0, 0]) & (gidx < total)
+
+    cnt_ref[0, 0] = jnp.sum(mask.astype(jnp.int32))
+
+    # target slot per survivor (0-based), overflow beyond cap is dropped
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    live = mask & (pos < cap)
+    # one-hot pack: [block, cap]; values go through an MXU-friendly matmul,
+    # indices through an exact i32 where-reduce.
+    onehot = (pos[:, None] == jax.lax.iota(jnp.int32, cap)[None, :]) & live[:, None]
+    vals_ref[...] = (x[:, None] * onehot.astype(jnp.float32)).sum(0).reshape(1, cap)
+    idx_packed = jnp.where(onehot, gidx[:, None], 0).sum(0)
+    filled = jnp.sum(onehot.astype(jnp.int32), axis=0) > 0
+    idx_ref[...] = jnp.where(filled, idx_packed, total).reshape(1, cap)
+
+
+def compact_gt(
+    x2d: jax.Array,
+    threshold: jax.Array,
+    cap_per_block: int,
+    total: int,
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x2d: [nb, block] zero-padded flat residual. Returns
+    (values [nb, cap], indices [nb, cap] i32 — padding == total, counts [nb])."""
+    nb, block = x2d.shape
+    thr = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_kernel, block=block, cap=cap_per_block,
+                             total=total)
+    vals, idx, cnt = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cap_per_block), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap_per_block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, cap_per_block), jnp.float32),
+            jax.ShapeDtypeStruct((nb, cap_per_block), jnp.int32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(thr, x2d)
+    return vals, idx, cnt[:, 0]

@@ -1,0 +1,183 @@
+"""jit'd wrappers composing the Pallas kernels into RedSync's selectors.
+
+These mirror the pure-jnp selectors in core/selection.py (same Selected
+contract) but route the hot loops through the TPU kernels:
+
+    trimmed_topk           = block_stats -> ratio loop(count_gt)
+                             -> compact_gt -> exact top-k on the short bucket
+    threshold_binary_search = block_stats -> bisect loop(count_gt)
+                             -> compact_gt -> first-2k filter
+
+``interpret`` defaults to True so the same code validates on CPU; on real
+TPU hardware pass interpret=False (kernels carry explicit BlockSpec tiling).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selection import Selected
+
+from .block_stats import abs_sum_max
+from .compact import compact_gt
+from .residual_update import residual_update as _residual_update_kernel
+from .threshold_count import count_gt
+
+DEFAULT_BLOCK = 1024
+
+
+def _to2d(x: jax.Array, block: int) -> tuple[jax.Array, int]:
+    n = x.size
+    nb = max(1, -(-n // block))
+    xp = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, nb * block - n))
+    return xp.reshape(nb, block), n
+
+
+def _bucket_cap(k: int, nb: int, block: int) -> int:
+    """Per-block bucket size: 4x the uniform share of 2k survivors, rounded
+    to the 8-sublane granule, clamped to the block."""
+    per = -(-2 * k // nb)
+    return min(block, max(8, ((4 * per + 7) // 8) * 8))
+
+
+def stats(x: jax.Array, *, block: int = DEFAULT_BLOCK,
+          interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(mean(|x|), max(|x|)) via the fused reduction kernel."""
+    x2d, n = _to2d(x, block)
+    s, m = abs_sum_max(x2d, interpret=interpret)
+    return s / n, m
+
+
+def nnz_gt(x: jax.Array, threshold: jax.Array, *, block: int = DEFAULT_BLOCK,
+           interpret: bool = True) -> jax.Array:
+    x2d, _ = _to2d(x, block)
+    return count_gt(x2d, threshold, interpret=interpret)
+
+
+def _gather_topk_from_buckets(vals, idx, k: int, total: int,
+                              order_by_magnitude: bool):
+    """Pick k entries from the [nb, cap] buckets: by |value| (trimmed top-k)
+    or simply the first-k valid slots (binary-search filter)."""
+    fv, fi = vals.reshape(-1), idx.reshape(-1)
+    valid = fi < total
+    if order_by_magnitude:
+        score = jnp.where(valid, jnp.abs(fv), -1.0)
+    else:
+        score = valid.astype(jnp.float32)
+    _, pos = jax.lax.top_k(score, k)
+    sel_idx = jnp.where(valid[pos], fi[pos], total)
+    sel_val = jnp.where(valid[pos], fv[pos], 0.0)
+    return sel_idx.astype(jnp.int32), sel_val
+
+
+def trimmed_topk(x: jax.Array, k: int, *, eps: float = 0.2,
+                 block: int = DEFAULT_BLOCK,
+                 interpret: bool = True) -> Selected:
+    """Algorithm 2 on the TPU kernels. capacity == k."""
+    x2d, n = _to2d(x, block)
+    nb = x2d.shape[0]
+    s, mx = abs_sum_max(x2d, interpret=interpret)
+    mean = s / n
+
+    def cond(state):
+        ratio, nnz = state
+        return jnp.logical_and(nnz < k, ratio > 0.0)
+
+    def body(state):
+        ratio, _ = state
+        ratio = ratio - eps
+        thr = mean + ratio * (mx - mean)
+        return ratio, count_gt(x2d, thr, interpret=interpret)
+
+    r0 = jnp.float32(1.0 - eps)
+    nnz0 = count_gt(x2d, mean + r0 * (mx - mean), interpret=interpret)
+    ratio, _ = jax.lax.while_loop(cond, body, (r0, nnz0))
+    thr = mean + ratio * (mx - mean)
+
+    cap = _bucket_cap(k, nb, block)
+    vals, idx, counts = compact_gt(x2d, thr, cap, n, interpret=interpret)
+    si, sv = _gather_topk_from_buckets(vals, idx, k, n,
+                                       order_by_magnitude=True)
+    # Alg 2's coarse (eps=0.2) threshold steps can leave far more than k
+    # survivors; if any block overflowed its bucket, elements above the
+    # threshold were dropped and the bucket top-k may be wrong — fall back
+    # to the exact selector for this (rare) iteration.
+    overflow = jnp.any(counts > cap)
+
+    def from_buckets(_):
+        return si, sv
+
+    def exact(_):
+        from repro.core.selection import exact_topk
+        s = exact_topk(x.reshape(-1).astype(jnp.float32), k)
+        return s.indices, s.values
+
+    si, sv = jax.lax.cond(overflow, exact, from_buckets, operand=None)
+    return Selected(si, sv, jnp.int32(k))
+
+
+def threshold_binary_search(x: jax.Array, k: int, *, eps: float = 1e-3,
+                            block: int = DEFAULT_BLOCK,
+                            interpret: bool = True) -> tuple[Selected, jax.Array]:
+    """Algorithm 3 on the TPU kernels. capacity == 2k; returns threshold."""
+    x2d, n = _to2d(x, block)
+    nb = x2d.shape[0]
+    s, mx = abs_sum_max(x2d, interpret=interpret)
+    mean = s / n
+
+    def cond(state):
+        l, r, nnz = state
+        done = jnp.logical_and(nnz >= k, nnz <= 2 * k)
+        return jnp.logical_and(~done, (r - l) > eps)
+
+    def body(state):
+        l, r, _ = state
+        ratio = l + (r - l) / 2.0
+        thr = mean + ratio * (mx - mean)
+        nnz = count_gt(x2d, thr, interpret=interpret)
+        r = jnp.where(nnz < k, ratio, r)
+        l = jnp.where(nnz > 2 * k, ratio, l)
+        return l, r, nnz
+
+    l, r, _ = jax.lax.while_loop(
+        cond, body, (jnp.float32(0.0), jnp.float32(1.0), jnp.int32(-1)))
+    thr = mean + (l + (r - l) / 2.0) * (mx - mean)
+
+    nnz = count_gt(x2d, thr, interpret=interpret)
+    cap = _bucket_cap(k, nb, block)
+    vals, idx, counts = compact_gt(x2d, thr, cap, n, interpret=interpret)
+    si, sv = _gather_topk_from_buckets(vals, idx, 2 * k, n,
+                                       order_by_magnitude=False)
+    # same overflow guard as trimmed_topk (search may exit on r-l <= eps
+    # with nnz >> 2k); fall back to the jnp filter for exactness
+    overflow = jnp.any(counts > cap)
+
+    def from_buckets(_):
+        return si, sv
+
+    def exact(_):
+        from repro.core.selection import threshold_filter
+        s = threshold_filter(x.reshape(-1).astype(jnp.float32), thr,
+                             capacity=2 * k)
+        return s.indices, s.values
+
+    si, sv = jax.lax.cond(overflow, exact, from_buckets, operand=None)
+    return Selected(si, sv, jnp.minimum(nnz, 2 * k)), thr
+
+
+def residual_update(grad: jax.Array, u: jax.Array, v: jax.Array, *,
+                    momentum: float, nesterov: bool,
+                    block: int = DEFAULT_BLOCK,
+                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Fused U/V update on arbitrary-shaped leaves."""
+    shape, n = grad.shape, grad.size
+    g2, _ = _to2d(grad, block)
+    u2, _ = _to2d(u, block)
+    v2, _ = _to2d(v, block)
+    u_new, v_new = _residual_update_kernel(
+        g2, u2, v2, momentum=momentum, nesterov=nesterov, interpret=interpret)
+    return (u_new.reshape(-1)[:n].reshape(shape),
+            v_new.reshape(-1)[:n].reshape(shape))

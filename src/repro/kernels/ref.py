@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def abs_sum_max(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(sum(|x|), max(|x|)) — the statistics feeding Alg 2/3 thresholds."""
+    ax = jnp.abs(x.astype(jnp.float32))
+    return jnp.sum(ax), jnp.max(ax)
+
+
+def count_gt(x: jax.Array, threshold: jax.Array) -> jax.Array:
+    """nnz(|x| > threshold) as i32 — the count_nonzero hot loop of Alg 3."""
+    return jnp.sum(jnp.abs(x.astype(jnp.float32)) > threshold).astype(jnp.int32)
+
+
+def compact_gt(
+    x: jax.Array, threshold: jax.Array, block: int, cap_per_block: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Block-bucketed stream compaction oracle.
+
+    Splits flat ``x`` into ``block``-sized blocks; within each block emits the
+    first ``cap_per_block`` elements with |x| > threshold (padded with index
+    == x.size, value 0) plus the per-block survivor count (pre-clamp).
+
+    Returns (values [nb, cap], indices [nb, cap] i32, counts [nb] i32).
+    """
+    n = x.size
+    nb = -(-n // block)
+    xp = jnp.pad(x.astype(jnp.float32).reshape(-1), (0, nb * block - n))
+    xb = xp.reshape(nb, block)
+    gidx = jnp.arange(nb * block).reshape(nb, block)
+    mask = (jnp.abs(xb) > threshold) & (gidx < n)
+
+    def per_block(xrow, mrow, grow):
+        (pos,) = jnp.nonzero(mrow, size=cap_per_block, fill_value=block)
+        safe = jnp.minimum(pos, block - 1)
+        vals = jnp.where(pos < block, xrow[safe], 0.0)
+        idxs = jnp.where(pos < block, grow[safe], n)
+        return vals, idxs.astype(jnp.int32), jnp.sum(mrow).astype(jnp.int32)
+
+    return jax.vmap(per_block)(xb, mask, gidx)
+
+
+def residual_update(
+    grad: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    *,
+    momentum: float,
+    nesterov: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused momentum-correction + residual accumulation (Alg 4 l.11–19)."""
+    g = grad.astype(jnp.float32)
+    u_new = momentum * u + g
+    v_new = v + u_new
+    if nesterov:
+        v_new = v_new + g
+    return u_new, v_new

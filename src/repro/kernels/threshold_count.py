@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: nnz(|x| > t) — the count_nonzero inner loop of Alg 3.
+
+The binary-search selector calls this once per search step; on TPU the count
+is a VPU compare + popcount-style sum per VMEM block, accumulated across the
+sequential grid into a (1,1) i32 block. The threshold arrives as a (1,1)
+operand so the *same compiled kernel* serves every search iteration (the
+paper re-launches a CUDA kernel per step; here the while_loop re-invokes the
+pallas_call with a new scalar).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(thr_ref, x_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = 0
+
+    mask = jnp.abs(x_ref[...].astype(jnp.float32)) > thr_ref[0, 0]
+    out_ref[0, 0] += jnp.sum(mask.astype(jnp.int32))
+
+
+def count_gt(x2d: jax.Array, threshold: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """x2d: [nb, block] zero-padded; threshold scalar (>=0 drops the padding
+    automatically since |0| > t is false for t >= 0). Returns i32 count."""
+    nb, block = x2d.shape
+    thr = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(thr, x2d)
+    return out[0, 0]

@@ -1,0 +1,401 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) pair, lower + compile the right step
+on the production mesh — 16x16 single-pod and (2,16,16) multi-pod — with
+ShapeDtypeStruct stand-ins (zero allocation), then record:
+
+  * memory_analysis()  — per-device bytes (proves it fits / flags overflow)
+  * cost_analysis()    — per-device HLO FLOPs + bytes accessed
+  * collective wire bytes parsed from compiled HLO (launch/hlo_stats.py)
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json, which the
+roofline benchmark (benchmarks/roofline.py) consumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+
+NOTE: the XLA_FLAGS line above MUST precede any jax import — device count
+locks at first init. Do not import this module from test/bench processes.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, ParallelConfig, TrainConfig, get_config
+from repro.configs.shapes import InputShape
+from repro.core.rgc import rgc_init
+from repro.launch.hlo_stats import collective_summary
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import Model, get_model
+from repro.train.trainer import (fsdp_parallel_config, make_fsdp_dense_step,
+                                 make_rgc_config, make_train_step)
+from repro.train.serve import make_decode_step, make_prefill_step
+
+# Per-arch memory adaptations for the paper-faithful RGC train step
+# (documented in EXPERIMENTS.md §Dry-run):
+#   qwen3-32b    — replicated f32 residual+momentum (16 GB/chip) exceeds
+#                  v5e HBM; vanilla-SGD RGC (the paper's LSTM setting) with
+#                  bf16 residual fits.
+#   grok-1-314b  — 314B params cannot hold ANY per-replica residual state;
+#                  the paper's technique structurally requires replicated
+#                  parameter storage -> dense GSPMD/FSDP baseline instead
+#                  (DESIGN.md §Arch-applicability).
+TRAIN_OVERRIDES: dict[str, dict] = {
+    "qwen3-32b": {"momentum": 0.0, "residual_dtype": "bf16"},
+    "grok-1-314b": {"optimizer": "dense_fsdp"},
+}
+# serve-side storage sharding: grok params don't fit 16-way model sharding
+SERVE_FSDP = {"grok-1-314b"}
+
+
+def _abstract_state(model: Model, params_s, tc: TrainConfig, mesh):
+    rgc_cfg = make_rgc_config(tc, mesh)
+    return jax.eval_shape(lambda p: rgc_init(p, rgc_cfg), params_s)
+
+
+# ---------------------------------------------------------------------------
+# calibration lowers (roofline accuracy)
+#
+# XLA's cost_analysis counts every loop body ONCE (scan over layers, the
+# flash-attention kv fori_loop, the chunked-CE scan...). For the roofline we
+# therefore lower additional CALIBRATION variants with (a) loops removed
+# where exact (single-trip chunks) and (b) 1 vs 2 layer units with
+# scan_layers=False, and extrapolate: corrected = base + trips * unit.
+# benchmarks/roofline.py assembles the correction; records carry tag
+# calib_<unit>_<n>.
+# ---------------------------------------------------------------------------
+
+def _loopfree(cfg, seq: int):
+    """Chunk settings that make in-layer loops single-trip (exact count).
+
+    Full attention: one q x kv block (counts the full S^2 rectangle — a
+    ~2x conservative overcount vs ideal causal skipping, noted in
+    EXPERIMENTS.md). SWA: q=window, kv=2*window -> one trip, ~1.33x
+    overcount of the true window band.
+    """
+    # NOTE wkv_chunk stays at the production value: chunked-WKV cost is
+    # QUADRATIC in the chunk (scores [B,H,L,L]) — chunk=seq would measure
+    # O(S^2) instead of the production O(S*chunk); the once-counted wkv
+    # scan body is <0.1% of a layer (the 5 D^2 projections dominate).
+    kw = dict(loss_chunk=seq)
+    if cfg.window_size:
+        kw.update(attn_q_chunk=cfg.window_size,
+                  attn_kv_chunk=2 * cfg.window_size)
+    else:
+        kw.update(attn_q_chunk=seq, attn_kv_chunk=seq)
+    return dataclasses.replace(cfg, **kw)
+
+
+def calib_variants(arch: str) -> dict[str, tuple]:
+    """unit name -> (cfg_1unit, cfg_2unit, trips_in_full_config)."""
+    cfg = get_config(arch)
+    out: dict[str, tuple] = {}
+    if cfg.family == "hybrid":
+        pat = cfg.layer_pattern or ("R", "R", "L")
+        counts = {c: sum(1 for i in range(cfg.num_layers)
+                         if pat[i % len(pat)] == c) for c in set(pat)}
+        for code, n in counts.items():
+            c1 = dataclasses.replace(cfg, num_layers=1,
+                                     layer_pattern=(code,),
+                                     scan_layers=False)
+            c2 = dataclasses.replace(cfg, num_layers=2,
+                                     layer_pattern=(code, code),
+                                     scan_layers=False)
+            out[f"layer{code}"] = (c1, c2, n)
+        return out
+    if cfg.family == "encdec":
+        e1 = dataclasses.replace(cfg, encoder_layers=1, num_layers=1,
+                                 scan_layers=False)
+        e2 = dataclasses.replace(cfg, encoder_layers=2, num_layers=1,
+                                 scan_layers=False)
+        d2 = dataclasses.replace(cfg, encoder_layers=1, num_layers=2,
+                                 scan_layers=False)
+        out["enc"] = (e1, e2, cfg.encoder_layers)
+        out["dec"] = (e1, d2, cfg.num_layers)
+        return out
+    codes = set(cfg.pattern_codes())
+    code_names = {0: "G", 1: "L"}
+    for code in codes:
+        n = sum(1 for c in cfg.pattern_codes() if c == code)
+        pat = (code_names[code],)
+        c1 = dataclasses.replace(cfg, num_layers=1, layer_pattern=pat,
+                                 scan_layers=False)
+        c2 = dataclasses.replace(cfg, num_layers=2, layer_pattern=pat * 2,
+                                 scan_layers=False)
+        out[f"layer{code_names[code]}"] = (c1, c2, n)
+    return out
+
+
+def lower_pair(arch: str, shape: InputShape, mesh, *,
+               optimizer: str = "rgc", density: float = 0.001,
+               cfg=None):
+    """Build + lower the step for one (arch, shape). Returns (lowered,
+    meta) or raises. Skips (returns None) out-of-family pairs."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    model = get_model(cfg)
+    pc = ParallelConfig()
+
+    if shape.kind == "train":
+        ov = dict(TRAIN_OVERRIDES.get(arch, {}))
+        opt = ov.pop("optimizer", optimizer)
+        tc = TrainConfig(optimizer=opt, density=density, **ov)
+        params_s = model.abstract_params()
+        batch_s = model.train_inputs(shape.global_batch, shape.seq_len)
+        lr_s = jax.ShapeDtypeStruct((), jnp.float32)
+        # donate args: matches production aliasing (params/opt state update
+        # in place) — halves peak memory (qwen3 train: 15.3 -> 7.6 GiB)
+        if opt == "dense_fsdp":
+            step = make_fsdp_dense_step(model, mesh, pc, tc, donate=True)
+            mom_s = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                params_s)
+            lowered = step.lower(params_s, mom_s, batch_s, lr_s)
+        else:
+            step = make_train_step(model, mesh, pc, tc, donate=True)
+            state_s = _abstract_state(model, params_s, tc, mesh)
+            lowered = step.lower(params_s, state_s, batch_s, lr_s)
+        return lowered, {"optimizer": opt, "overrides": ov}
+
+    if shape.kind == "decode" and shape.name == "long_500k":
+        if not model.supports_long:
+            return None, {"skipped": "full-attention arch: long_500k decode "
+                          "is out of family (DESIGN.md shape carve-outs)"}
+    if model.cache_struct is None:
+        return None, {"skipped": "no decode path for this family"}
+
+    spc = fsdp_parallel_config(pc, mesh) if arch in SERVE_FSDP else pc
+    params_s = model.abstract_params()
+    cache_s = model.cache_struct(shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        step = make_prefill_step(model, mesh, spc, shape.global_batch,
+                                 shape.seq_len)
+        batch_s = model.train_inputs(shape.global_batch, shape.seq_len)
+        lowered = step.lower(params_s, batch_s, cache_s)
+    else:
+        step = make_decode_step(model, mesh, spc, shape.global_batch,
+                                shape.seq_len)
+        tok_s = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = step.lower(params_s, cache_s, tok_s, pos_s)
+    return lowered, {"optimizer": "serve",
+                     "fsdp_params": arch in SERVE_FSDP}
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes", "peak_memory_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def _patch_cfg(cfg, settings: dict):
+    """Apply --set key=value overrides (ints/floats/strs auto-coerced)."""
+    if not settings:
+        return cfg
+    coerced = {}
+    for k, v in settings.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            coerced[k] = v in ("1", "true", "True")
+        elif isinstance(cur, int):
+            coerced[k] = int(v)
+        elif isinstance(cur, float):
+            coerced[k] = float(v)
+        else:
+            coerced[k] = v
+    return dataclasses.replace(cfg, **coerced)
+
+
+def run_pair(arch: str, shape: InputShape, *, multi_pod: bool,
+             out_dir: str, skip_existing: bool = False,
+             optimizer: str = "rgc", density: float = 0.001,
+             tag: str = "", settings: dict | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{tag}" if tag else ""
+    fname = os.path.join(out_dir,
+                         f"{arch}__{shape.name}__{mesh_name}{suffix}.json")
+    if skip_existing and os.path.exists(fname):
+        with open(fname) as f:
+            return json.load(f)
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rec: dict = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+                 "devices": n_dev, "optimizer": optimizer, "tag": tag}
+    t0 = time.time()
+    try:
+        cfg = _patch_cfg(get_config(arch), settings or {})
+        rec["settings"] = settings or {}
+        # the mesh context makes bare-PartitionSpec activation constraints
+        # (models.common.shard) bind and exposes the abstract mesh to
+        # trace-time introspection (moe shard-local dispatch); without it
+        # they silently no-op
+        with jax.set_mesh(mesh):
+            lowered, meta = lower_pair(arch, shape, mesh,
+                                       optimizer=optimizer,
+                                       density=density, cfg=cfg)
+        rec.update(meta or {})
+        if lowered is None:
+            rec["status"] = "skipped"
+            print(f"[skip] {arch} x {shape.name} ({mesh_name}): "
+                  f"{rec.get('skipped')}")
+        else:
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+            mem = compiled.memory_analysis()
+            rec["memory_analysis"] = _mem_dict(mem)
+            cost = compiled.cost_analysis()
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "transcendentals", "bytes accessed",
+                          "optimal_seconds")
+                    or k.startswith("bytes accessed"))}
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_summary(hlo)
+            rec["hlo_bytes"] = len(hlo)
+            rec["status"] = "ok"
+            print(f"[ok]   {arch} x {shape.name} ({mesh_name}) "
+                  f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                  f"flops/dev {rec['cost_analysis'].get('flops', 0):.3e} "
+                  f"wire/dev {rec['collectives']['total_wire_bytes']:.3e}B")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch} x {shape.name} ({mesh_name}): {rec['error']}")
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_calib(arch: str, shape: InputShape, *, multi_pod: bool,
+              out_dir: str, skip_existing: bool = False,
+              optimizer: str = "rgc", density: float = 0.001) -> list[dict]:
+    """Calibration lowers for one (arch, shape): per layer-unit, 1- and
+    2-unit loop-free variants. Only train/prefill kinds need them (decode
+    paths are loop-free already)."""
+    if shape.kind == "decode":
+        return []
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    recs = []
+    for unit, (c1, c2, trips) in calib_variants(arch).items():
+        for n, ccfg in ((1, c1), (2, c2)):
+            tag = f"calib_{unit}_{n}"
+            fname = os.path.join(
+                out_dir, f"{arch}__{shape.name}__{mesh_name}__{tag}.json")
+            if skip_existing and os.path.exists(fname):
+                with open(fname) as f:
+                    recs.append(json.load(f))
+                continue
+            rec = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+                   "tag": tag, "unit": unit, "units": n, "trips": trips}
+            t0 = time.time()
+            try:
+                ccfg = _loopfree(ccfg, shape.seq_len)
+                with jax.set_mesh(mesh):
+                    lowered, meta = lower_pair(
+                        arch, shape, mesh, optimizer=optimizer,
+                        density=density, cfg=ccfg)
+                if lowered is None:
+                    rec["status"] = "skipped"
+                else:
+                    compiled = lowered.compile()
+                    cost = compiled.cost_analysis()
+                    rec["cost_analysis"] = {
+                        k: float(v) for k, v in cost.items()
+                        if isinstance(v, (int, float)) and
+                        k in ("flops", "transcendentals", "bytes accessed")}
+                    rec["collectives"] = collective_summary(
+                        compiled.as_text())
+                    rec["status"] = "ok"
+                    rec["seconds"] = round(time.time() - t0, 2)
+                    print(f"[calib] {arch} x {shape.name} {tag} "
+                          f"flops/dev {rec['cost_analysis']['flops']:.3e} "
+                          f"({rec['seconds']}s)")
+            except Exception as e:
+                rec["status"] = "error"
+                rec["error"] = f"{type(e).__name__}: {e}"
+                rec["traceback"] = traceback.format_exc()[-4000:]
+                print(f"[calib FAIL] {arch} x {shape.name} {tag}: "
+                      f"{rec['error']}")
+            with open(fname, "w") as f:
+                json.dump(rec, f, indent=1)
+            recs.append(rec)
+    return recs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimizer", default="rgc",
+                    choices=["rgc", "rgc_quant", "dense"])
+    ap.add_argument("--density", type=float, default=0.001)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--calib", action="store_true",
+                    help="run the roofline calibration lowers instead")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="ModelConfig override for perf variants "
+                    "(e.g. --set moe_impl=scatter --tag scatter)")
+    args = ap.parse_args()
+    settings = dict(kv.split("=", 1) for kv in getattr(args, "set"))
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = (list(SHAPES.values()) if (args.all or not args.shape)
+              else [SHAPES[args.shape]])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                if args.calib:
+                    recs = run_calib(arch, shape, multi_pod=multi_pod,
+                                     out_dir=args.out_dir,
+                                     skip_existing=args.skip_existing,
+                                     optimizer=args.optimizer,
+                                     density=args.density)
+                    n_fail += sum(r.get("status") == "error" for r in recs)
+                else:
+                    rec = run_pair(arch, shape, multi_pod=multi_pod,
+                                   out_dir=args.out_dir,
+                                   skip_existing=args.skip_existing,
+                                   optimizer=args.optimizer,
+                                   density=args.density, tag=args.tag,
+                                   settings=settings)
+                    n_fail += rec.get("status") == "error"
+    if n_fail:
+        raise SystemExit(f"{n_fail} pair(s) failed")
+
+
+if __name__ == "__main__":
+    main()

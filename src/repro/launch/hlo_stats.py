@@ -1,0 +1,106 @@
+"""Parse collective ops + byte counts out of compiled HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so the roofline's third
+term comes from here: we walk every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` instruction in
+the (SPMD-partitioned) module and compute per-device WIRE bytes from the
+instruction's result shape and replica-group size with ring-algorithm
+algebra:
+
+    all-reduce:          2 * (g-1)/g * bytes(result)
+    all-gather:              (g-1)/g * bytes(result)      (result = g*operand)
+    reduce-scatter:          (g-1)   * bytes(result)      (operand = g*result)
+    all-to-all:              (g-1)/g * bytes(result)
+    collective-permute:                bytes(result)
+
+Group size g is parsed from replica_groups (explicit ``{{0,1,...}}`` lists or
+iota ``[n,g]<=[...]`` form).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclass
+class Collective:
+    op: str
+    result_bytes: int
+    group_size: int
+    wire_bytes: int       # per-device bytes on the wire (ring algebra)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _wire(op: str, result_bytes: int, g: int) -> int:
+    if g <= 1:
+        return 0
+    if op == "all-reduce":
+        return int(2 * (g - 1) / g * result_bytes)
+    if op == "all-gather":
+        return int((g - 1) / g * result_bytes)
+    if op == "reduce-scatter":
+        return int((g - 1) * result_bytes)
+    if op == "all-to-all":
+        return int((g - 1) / g * result_bytes)
+    return result_bytes      # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    out: list[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:       # started op already counted at -start
+            continue
+        tuple_body, dtype, dims, op = m.groups()
+        if tuple_body is not None:
+            rb = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(tuple_body))
+        else:
+            rb = _shape_bytes(dtype, dims)
+        gm = _GROUPS_LIST_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            g = int(gi.group(2)) if gi else 1
+        out.append(Collective(op, rb, g, _wire(op, rb, g)))
+    return out
+
+
+def collective_summary(hlo_text: str) -> dict:
+    colls = parse_collectives(hlo_text)
+    by_op: dict[str, dict] = {}
+    for c in colls:
+        d = by_op.setdefault(c.op, {"count": 0, "result_bytes": 0,
+                                    "wire_bytes": 0})
+        d["count"] += 1
+        d["result_bytes"] += c.result_bytes
+        d["wire_bytes"] += c.wire_bytes
+    return {
+        "total_wire_bytes": sum(c.wire_bytes for c in colls),
+        "total_count": len(colls),
+        "by_op": by_op,
+    }

@@ -1,0 +1,96 @@
+"""Training launcher.
+
+On real TPU pods this runs under the production mesh; on this CPU container
+it drives the same code path at smoke scale (``--smoke`` configs, optional
+forced host devices via --host-devices, which must be set before jax init —
+hence the env var dance at the top).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b --smoke \
+      --steps 50 --batch 8 --seq 128 --optimizer rgc --density 0.01
+  REPRO_HOST_DEVICES=8 PYTHONPATH=src python -m repro.launch.train \
+      --arch rwkv6-3b --smoke --mesh 4x2 --steps 20
+"""
+import os
+
+if os.environ.get("REPRO_HOST_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_HOST_DEVICES"])
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config
+from repro.data import SyntheticLM, bigram_batches
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ("paper-lstm",),
+                    required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.2)
+    ap.add_argument("--optimizer", default="rgc",
+                    choices=["rgc", "rgc_quant", "dense"])
+    ap.add_argument("--density", type=float, default=0.01)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--warmup-steps-per-stage", type=int, default=0)
+    ap.add_argument("--mesh", default=None,
+                    help="DxM over host devices (e.g. 4x2); 'pod' or "
+                    "'2pod' for the production meshes")
+    ap.add_argument("--data", default="bigram", choices=["bigram", "zipf"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = None
+    if args.mesh == "pod":
+        mesh = make_production_mesh(multi_pod=False)
+    elif args.mesh == "2pod":
+        mesh = make_production_mesh(multi_pod=True)
+    elif args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_host_mesh(d, m)
+
+    tc = TrainConfig(lr=args.lr, momentum=args.momentum,
+                     optimizer=args.optimizer, density=args.density,
+                     warmup_steps_per_stage=args.warmup_steps_per_stage)
+    trainer = Trainer(cfg, tc, mesh=mesh, ckpt_dir=args.ckpt_dir)
+    state = trainer.init_state()
+    n = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"arch={cfg.name} params={n:,} optimizer={args.optimizer} "
+          f"density={args.density} mesh={args.mesh or 'single-device'}")
+
+    if args.data == "bigram":
+        batches = bigram_batches(cfg.vocab_size, args.batch, args.seq,
+                                 seed=tc.seed)
+    else:
+        batches = iter(SyntheticLM(cfg.vocab_size, args.batch, args.seq,
+                                   seed=tc.seed))
+    if cfg.family in ("vlm", "encdec"):
+        # modality stubs: attach frame/patch embeddings to each batch
+        from repro.models.registry import get_model
+        model = get_model(cfg)
+        stub = model.make_train_batch(args.batch, args.seq)
+
+        def with_stub(src):
+            for b in src:
+                extra = {k: v for k, v in stub.items() if k != "tokens"}
+                yield {**b, **extra}
+        batches = with_stub(batches)
+
+    trainer.run(state, batches, args.steps, log_every=args.log_every)
+
+
+if __name__ == "__main__":
+    main()

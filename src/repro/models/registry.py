@@ -1,0 +1,171 @@
+"""Unified model interface over the six families.
+
+Every family exposes the same five entry points through ``get_model(cfg)``:
+
+    param_defs()                      ParamDef tree
+    loss(params, batch)               scalar train loss
+    cache_struct(batch, seq)          ShapeDtypeStruct cache tree (None = no decode)
+    init_cache(batch, seq)            concrete zero cache
+    prefill(params, batch, cache)     (cache, last-token logits)
+    decode_step(params, cache, token, pos)  (logits, cache)
+
+plus ``train_inputs`` / ``decode_inputs`` describing the batch as
+ShapeDtypeStructs (the dry-run's input_specs building blocks) and
+``make_train_batch`` producing concrete synthetic data for smoke tests.
+
+Families: dense / moe / vlm ride the transformer chassis (vlm adds stub
+patch embeddings as a bidirectional prefix); rwkv6, hybrid (recurrentgemma),
+encdec (whisper), lstm have their own modules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import encdec, lstm, rglru, rwkv6, transformer
+from .common import abstract_params as _abstract, init_params as _init
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    param_defs: Callable[[], Any]
+    loss: Callable[[Any, dict], jax.Array]
+    cache_struct: Optional[Callable[[int, int], Any]]
+    init_cache: Optional[Callable[[int, int], Any]]
+    prefill: Optional[Callable[[Any, dict, Any], tuple]]
+    decode_step: Optional[Callable[[Any, Any, jax.Array, jax.Array], tuple]]
+    # which serve shapes are in-family (DESIGN.md shape-coverage carve-outs)
+    supports_decode: bool = True
+    supports_long: bool = False
+
+    def init_params(self, seed: int = 0):
+        return _init(self.param_defs(), seed, self.cfg.dtype)
+
+    def abstract_params(self, mesh=None, pc=None):
+        return _abstract(self.param_defs(), self.cfg.dtype, mesh, pc)
+
+    # ---- batch descriptions -------------------------------------------------
+    def train_inputs(self, batch: int, seq: int) -> dict:
+        cfg = self.cfg
+        d: dict[str, jax.ShapeDtypeStruct] = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        if cfg.family == "vlm":
+            d["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.num_prefix_tokens, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            d["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+        return d
+
+    def decode_inputs(self, batch: int) -> dict:
+        return {"token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def make_train_batch(self, batch: int, seq: int, seed: int = 0) -> dict:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        out: dict[str, jax.Array] = {
+            "tokens": jax.random.randint(k1, (batch, seq), 0,
+                                         cfg.vocab_size, jnp.int32)}
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = 0.02 * jax.random.normal(
+                k2, (batch, cfg.num_prefix_tokens, cfg.d_model), jnp.float32
+            ).astype(cfg.dtype)
+        if cfg.family == "encdec":
+            out["frames"] = 0.02 * jax.random.normal(
+                k3, (batch, cfg.encoder_frames, cfg.d_model), jnp.float32
+            ).astype(cfg.dtype)
+        return out
+
+
+def _transformer_model(cfg: ModelConfig, *, supports_long: bool) -> Model:
+    # vlm: the bidirectional patch-embedding prefix occupies the first
+    # num_prefix_tokens cache slots; decode positions are text-relative, so
+    # both the RoPE position and the cache slot shift by the prefix length.
+    off = cfg.num_prefix_tokens if cfg.family == "vlm" else 0
+    return Model(
+        cfg=cfg,
+        param_defs=lambda: transformer.param_defs(cfg),
+        loss=lambda p, b: transformer.loss(cfg, p, b),
+        cache_struct=lambda b, s: transformer.cache_struct(cfg, b, s + off),
+        init_cache=lambda b, s: transformer.init_cache(cfg, b, s + off),
+        prefill=lambda p, b, c: transformer.prefill(cfg, p, b, c),
+        decode_step=lambda p, c, t, pos: transformer.decode_step(
+            cfg, p, c, t, pos + off),
+        supports_decode=True,
+        supports_long=supports_long,
+    )
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        # long-context decode is in-family only when every layer is windowed
+        # or the pattern keeps global layers O(S·d) per token *with* a
+        # sub-quadratic total cache: SWA-only archs qualify; archs with any
+        # full-attention layer qualify only via the gemma3 local:global
+        # pattern (ring caches bound all local layers; the few global layers
+        # hold the long cache, O(S) per token decode).
+        codes = cfg.pattern_codes()
+        all_windowed = all(c == 1 for c in codes) and cfg.window_size
+        mostly_windowed = (cfg.window_size is not None
+                           and sum(c == 1 for c in codes) >= len(codes) * 0.8)
+        return _transformer_model(
+            cfg, supports_long=bool(all_windowed or mostly_windowed)
+            and fam != "vlm")
+    if fam == "rwkv6":
+        return Model(
+            cfg=cfg,
+            param_defs=lambda: rwkv6.param_defs(cfg),
+            loss=lambda p, b: rwkv6.loss(cfg, p, b),
+            cache_struct=lambda b, s: rwkv6.state_struct(cfg, b),
+            init_cache=lambda b, s: rwkv6.init_state(cfg, b),
+            prefill=lambda p, b, c: rwkv6.prefill(cfg, p, b, c),
+            decode_step=lambda p, c, t, pos: rwkv6.decode_step(
+                cfg, p, c, t, pos),
+            supports_long=True,
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            param_defs=lambda: rglru.param_defs(cfg),
+            loss=lambda p, b: rglru.loss(cfg, p, b),
+            cache_struct=lambda b, s: rglru.cache_struct(cfg, b, s),
+            init_cache=lambda b, s: rglru.init_cache(cfg, b, s),
+            prefill=lambda p, b, c: rglru.prefill(cfg, p, b, c),
+            decode_step=lambda p, c, t, pos: rglru.decode_step(
+                cfg, p, c, t, pos),
+            supports_long=True,
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            param_defs=lambda: encdec.param_defs(cfg),
+            loss=lambda p, b: encdec.loss(cfg, p, b),
+            cache_struct=lambda b, s: encdec.cache_struct(cfg, b, s),
+            init_cache=lambda b, s: encdec.init_cache(cfg, b, s),
+            prefill=lambda p, b, c: encdec.prefill(cfg, p, b, c),
+            decode_step=lambda p, c, t, pos: encdec.decode_step(
+                cfg, p, c, t, pos),
+            supports_long=False,
+        )
+    if fam == "lstm":
+        return Model(
+            cfg=cfg,
+            param_defs=lambda: lstm.param_defs(cfg),
+            loss=lambda p, b: lstm.loss(cfg, p, b),
+            cache_struct=lambda b, s: jax.eval_shape(
+                lambda: lstm.init_cache(cfg, b, s)),
+            init_cache=lambda b, s: lstm.init_cache(cfg, b, s),
+            prefill=lambda p, b, c: lstm.prefill(cfg, p, b, c),
+            decode_step=lambda p, c, t, pos: lstm.decode_step(
+                cfg, p, c, t, pos),
+            supports_long=True,
+        )
+    raise ValueError(f"unknown family: {fam}")

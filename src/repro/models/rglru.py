@@ -1,0 +1,279 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU recurrent
+blocks interleaved 2:1 with local (sliding-window) MQA attention.
+
+RG-LRU recurrence (per channel, c = 8):
+
+    r_t = sigmoid(W_a x_t)          i_t = sigmoid(W_i x_t)
+    log a_t = -c * r_t * softplus(Lambda)           (a_t in (0,1))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill evaluates the linear recurrence with ``lax.associative_scan``
+over time (combine: (a2,b2)∘(a1,b1) = (a1·a2, a2·b1 + b2)) — the TPU-native
+replacement for the paper's fused GPU scan kernel. Decode is the exact
+one-step recurrence. A causal depthwise conv1d (width 4) precedes the LRU.
+
+Layer layout: pattern (R, R, L) cycled. Training scans over *superblocks* of
+three layers (stacked params, flat HLO); a remainder of ``num_layers % 3``
+layers is unrolled. Serving unrolls everything (heterogeneous caches).
+
+Recurrent-layer cache: {"h": [B, lru], "conv": [B, w-1, lru]}; attention
+cache: ring-buffer KV of capacity == window.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import KVCache, attention_block, attn_defs, cache_spec
+from .common import (ParamDef, chunked_ce_loss, embed_defs, embed_lookup,
+                     lm_logits, mlp, mlp_defs, rms_norm, shard)
+
+C_RGLRU = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+def lru_defs(cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "w_x": ParamDef((d, w), ("embed", "lru")),
+        "w_y": ParamDef((d, w), ("embed", "lru")),
+        "conv_w": ParamDef((cfg.conv1d_width, w), (None, "lru"), scale=0.3),
+        "conv_b": ParamDef((w,), ("lru",), init="zeros"),
+        # COLUMN-parallel gate projections (output dim on the model axis):
+        # row-parallel ("lru", None) contracts over the sharded dim and
+        # forces a 1 GiB f32 all-reduce per gate per layer (52 of the 77
+        # big all-reduces in the prefill_32k HLO — EXPERIMENTS.md §Perf);
+        # column-parallel needs one shared bf16 all-gather of u instead
+        # (4x less wire) and keeps every LRU elementwise op model-sharded.
+        "w_a": ParamDef((w, w), (None, "lru"), scale=0.3),
+        "w_i": ParamDef((w, w), (None, "lru"), scale=0.3),
+        "lam": ParamDef((w,), ("lru",), init="ones"),
+        "w_out": ParamDef((w, d), ("lru", "embed")),
+    }
+
+
+def _causal_conv(p: dict, u: jax.Array, tail: Optional[jax.Array]):
+    """Depthwise causal conv1d. u: [B,S,W]; tail: [B,cw-1,W] history or None.
+    Returns (out [B,S,W], new tail)."""
+    cw = p["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    full = jnp.concatenate([tail, u], axis=1)
+    out = sum(full[:, i : i + u.shape[1]] * p["conv_w"][i]
+              for i in range(cw)) + p["conv_b"]
+    return out.astype(u.dtype), full[:, -(cw - 1):]
+
+
+def _lru_gates(p: dict, x_conv: jax.Array):
+    # gate matmuls in the input dtype (bf16 wire/compute), nonlinearities
+    # in f32 — the f32 upcast stays BELOW the gather/partial-sum boundary
+    r = jax.nn.sigmoid((x_conv @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x_conv @ p["w_i"]).astype(jnp.float32))
+    log_a = -C_RGLRU * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * x_conv.astype(jnp.float32))
+    return a, gated
+
+
+def lru_scan(p: dict, x_conv: jax.Array, h0: jax.Array):
+    """Associative scan over time. x_conv: [B,S,W]; h0: [B,W] f32."""
+    a, b = _lru_gates(p, x_conv)                      # [B,S,W] each
+    # fold h0 into the first step: b_0 += a_0 * h0
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def lru_step(p: dict, x_conv: jax.Array, h0: jax.Array):
+    """One decode step. x_conv: [B,1,W]."""
+    a, b = _lru_gates(p, x_conv)
+    h = a[:, 0] * h0 + b[:, 0]
+    return h[:, None], h
+
+
+def recurrent_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                    state: Optional[dict], *, decode: bool):
+    """Griffin recurrent temporal-mixing block."""
+    y = jax.nn.gelu(shard(x @ p["w_y"], None, None, "model"))
+    u = shard(x @ p["w_x"], None, None, "model")
+    tail = state["conv"] if state is not None else None
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32))
+    u, new_tail = _causal_conv(p, u, tail)
+    if decode:
+        h, h_last = lru_step(p, u, h0)
+    else:
+        h, h_last = lru_scan(p, u, h0)
+    out = (h.astype(x.dtype) * y) @ p["w_out"]
+    new_state = {"h": h_last, "conv": new_tail}
+    return shard(out, None, None, None), new_state
+
+
+# ---------------------------------------------------------------------------
+# hybrid model
+# ---------------------------------------------------------------------------
+
+def _block_defs(cfg: ModelConfig, kind: str) -> dict:
+    inner = lru_defs(cfg) if kind == "R" else attn_defs(cfg)
+    return {
+        "mix": inner,
+        "norm_mix": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        "norm_ffn": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        "ffn": mlp_defs(cfg),
+    }
+
+
+def _pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    pat = cfg.layer_pattern or ("R", "R", "L")
+    return tuple(pat[i % len(pat)] for i in range(cfg.num_layers))
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    from .transformer import _stack
+    pat = _pattern(cfg)
+    n_super = cfg.num_layers // 3 if cfg.num_layers >= 3 else 0
+    defs: dict[str, Any] = {"embed": embed_defs(cfg)}
+    if n_super:
+        defs["superblocks"] = _stack(
+            {"b0": _block_defs(cfg, pat[0]),
+             "b1": _block_defs(cfg, pat[1]),
+             "b2": _block_defs(cfg, pat[2])}, n_super)
+    for i in range(n_super * 3, cfg.num_layers):
+        defs[f"tail_{i}"] = _block_defs(cfg, pat[i])
+    defs["final_norm"] = ParamDef((cfg.d_model,), (None,), init="zeros")
+    return defs
+
+
+def _block(cfg: ModelConfig, p: dict, x: jax.Array, kind: str, *,
+           positions, cache, decode_pos, fill_cache):
+    h = rms_norm(x, p["norm_mix"], cfg.norm_eps)
+    if kind == "R":
+        a, new_cache = recurrent_block(cfg, p["mix"], h, cache,
+                                       decode=decode_pos is not None)
+    else:
+        kv = (KVCache(cache["k"], cache["v"], ring=True)
+              if cache is not None else None)
+        out = attention_block(cfg, p["mix"], h, positions=positions,
+                              theta=cfg.rope_theta, window=cfg.window_size,
+                              cache=kv, decode_pos=decode_pos,
+                              fill_cache=fill_cache,
+                              differentiable=not fill_cache)
+        a = out.out
+        new_cache = ({"k": out.cache.k, "v": out.cache.v}
+                     if out.cache is not None else None)
+    x = x + a
+    h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+    return x + mlp(cfg, p["ffn"], h), new_cache
+
+
+def _run(cfg: ModelConfig, params: dict, x: jax.Array, *, positions,
+         caches=None, decode_pos=None, fill_cache=False):
+    pat = _pattern(cfg)
+    n_super = cfg.num_layers // 3 if cfg.num_layers >= 3 else 0
+
+    if caches is None and n_super and cfg.scan_layers:
+        def body(carry, lp):
+            y = carry
+            for j, key in enumerate(("b0", "b1", "b2")):
+                y, _ = _block(cfg, lp[key], y, pat[j], positions=positions,
+                              cache=None, decode_pos=None, fill_cache=False)
+            return y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["superblocks"])
+        for i in range(n_super * 3, cfg.num_layers):
+            x, _ = _block(cfg, params[f"tail_{i}"], x, pat[i],
+                          positions=positions, cache=None, decode_pos=None,
+                          fill_cache=False)
+        return x, None
+
+    # unrolled (serving, or tiny smoke configs)
+    new_caches = []
+    for i in range(cfg.num_layers):
+        if i < n_super * 3:
+            sb, j = divmod(i, 3)
+            lp = jax.tree.map(lambda a: a[sb],
+                              params["superblocks"][("b0", "b1", "b2")[j]])
+        else:
+            lp = params[f"tail_{i}"]
+        cache = caches[i] if caches is not None else None
+        x, nc = _block(cfg, lp, x, pat[i], positions=positions, cache=cache,
+                       decode_pos=decode_pos, fill_cache=fill_cache)
+        new_caches.append(nc)
+    return x, (tuple(new_caches) if caches is not None else None)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    w = cfg.lru_width or cfg.d_model
+    out = []
+    for kind in _pattern(cfg):
+        if kind == "R":
+            out.append({"h": jnp.zeros((batch, w), jnp.float32),
+                        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w),
+                                          dtype)})
+        else:
+            shape, _ = cache_spec(cfg, batch, seq_len, cfg.window_size)
+            out.append({"k": jnp.zeros(shape, dtype),
+                        "v": jnp.zeros(shape, dtype)})
+    return tuple(out)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    w = cfg.lru_width or cfg.d_model
+    out = []
+    for kind in _pattern(cfg):
+        if kind == "R":
+            out.append({"h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+                        "conv": jax.ShapeDtypeStruct(
+                            (batch, cfg.conv1d_width - 1, w), dtype)})
+        else:
+            shape, _ = cache_spec(cfg, batch, seq_len, cfg.window_size)
+            out.append({"k": jax.ShapeDtypeStruct(shape, dtype),
+                        "v": jax.ShapeDtypeStruct(shape, dtype)})
+    return tuple(out)
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    tokens = batch["tokens"]
+    x = embed_lookup(cfg, params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])
+    x, _ = _run(cfg, params, x, positions=positions)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return chunked_ce_loss(cfg, params["embed"], h[:, :-1], tokens[:, 1:],
+                           batch.get("loss_mask"))
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, caches):
+    tokens = batch["tokens"]
+    x = embed_lookup(cfg, params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])
+    x, caches = _run(cfg, params, x, positions=positions, caches=caches,
+                     fill_cache=True)
+    h = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return caches, lm_logits(cfg, params["embed"], h)
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches, token: jax.Array,
+                pos: jax.Array):
+    x = embed_lookup(cfg, params["embed"], token)
+    positions = pos[None] if pos.ndim == 0 else pos
+    x, caches = _run(cfg, params, x, positions=positions, caches=caches,
+                     decode_pos=pos)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(cfg, params["embed"], h), caches

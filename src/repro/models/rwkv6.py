@@ -1,0 +1,328 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with token-shift
+data-dependent linear interpolation (ddlerp) and data-dependent decay.
+
+Recurrence per head (d_k = d_v = head_dim):
+
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t                    (state [dk, dv])
+    out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+TPU-native chunked-parallel form for train/prefill (the recurrent scan is a
+degenerate GPU port — one tiny matmul per token): within a chunk of length L,
+with P_t = prod_{s<=t} w_t (computed as exp(cumsum(log w)) in f32),
+
+    rt~ = r_t * P_{t-1}        kt~ = k_t / P_t
+    out = tril_strict(rt~ kt~^T) V + diag(r_t·u·k_t) V + rt~ S_0
+    S_L[a,b] = P_L[a] * (S_0[a,b] + sum_j kt~_j[a] v_j[b])
+
+so each chunk is three MXU matmuls + elementwise decay algebra; chunks chain
+through ``lax.scan`` carrying S. Decode runs the exact recurrence (one step).
+
+State carried between calls (the "KV cache" analogue, O(1) in sequence):
+    s      [B, H, dk, dv]   wkv state
+    x_tm   [B, D]           last input to time-mix token shift
+    x_cm   [B, D]           last input to channel-mix token shift
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import (ParamDef, act_fn, chunked_ce_loss, embed_defs,
+                     embed_lookup, lm_logits, layer_norm, shard)
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def _tm_defs(cfg: ModelConfig) -> dict:
+    d, lo = cfg.d_model, cfg.lora_dim
+    h = cfg.d_model // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    defs = {
+        # ddlerp: shared A, per-target B (the paper's stacked low-rank)
+        "mix_base": ParamDef((5, d), (None, "embed"), init="zeros"),
+        "mix_w1": ParamDef((d, 5 * lo), ("embed", None), scale=0.1),
+        "mix_w2": ParamDef((5, lo, d), (None, None, "embed"), scale=0.1),
+        # data-dependent decay lora (per-channel)
+        "decay_base": ParamDef((d,), ("embed",), init="zeros"),
+        "decay_w1": ParamDef((d, 2 * lo), ("embed", None), scale=0.1),
+        "decay_w2": ParamDef((2 * lo, d), (None, "embed"), scale=0.1),
+        "bonus": ParamDef((h, hd), ("heads", None), scale=0.1),
+        "wr": ParamDef((d, d), ("embed", "heads")),
+        "wk": ParamDef((d, d), ("embed", "heads")),
+        "wv": ParamDef((d, d), ("embed", "heads")),
+        "wg": ParamDef((d, d), ("embed", "heads")),
+        "wo": ParamDef((d, d), ("heads", "embed")),
+        "ln_x": ParamDef((d,), (None,), init="ones"),
+        "ln_x_b": ParamDef((d,), (None,), init="zeros"),
+    }
+    return defs
+
+
+def _cm_defs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix_k": ParamDef((d,), ("embed",), init="zeros"),
+        "mix_r": ParamDef((d,), ("embed",), init="zeros"),
+        "wk": ParamDef((d, f), ("embed", "ffn")),
+        "wr": ParamDef((d, d), ("embed", None), scale=0.5),
+        "wv": ParamDef((f, d), ("ffn", "embed")),
+    }
+
+
+def layer_defs(cfg: ModelConfig) -> dict:
+    return {
+        "tm": _tm_defs(cfg),
+        "cm": _cm_defs(cfg),
+        "norm_tm": ParamDef((cfg.d_model,), (None,), init="ones"),
+        "norm_tm_b": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        "norm_cm": ParamDef((cfg.d_model,), (None,), init="ones"),
+        "norm_cm_b": ParamDef((cfg.d_model,), (None,), init="zeros"),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    from .transformer import _stack
+    return {
+        "embed": embed_defs(cfg),
+        "ln_in": ParamDef((cfg.d_model,), (None,), init="ones"),
+        "ln_in_b": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        "layers": _stack(layer_defs(cfg), cfg.num_layers),
+        "final_norm": ParamDef((cfg.d_model,), (None,), init="ones"),
+        "final_norm_b": ParamDef((cfg.d_model,), (None,), init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time mix
+# ---------------------------------------------------------------------------
+
+def _ddlerp(p: dict, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent lerp producing the 5 mixed inputs [..., 5, D]."""
+    dx = x_prev - x                                     # [B,S,D]
+    base = x + dx * p["mix_base"][0]                    # the shared-A input
+    lo = p["mix_w1"].shape[1] // 5
+    a = jnp.tanh(base @ p["mix_w1"])                    # [B,S,5*lo]
+    a = a.reshape(*a.shape[:-1], 5, lo)
+    delta = jnp.einsum("bsml,mld->bsmd", a, p["mix_w2"])  # [B,S,5,D]
+    mixed = x[..., None, :] + dx[..., None, :] * (
+        p["mix_base"][None, None] + delta)
+    return mixed                                        # order: w,k,v,r,g
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Per-channel decay in (0,1): w = exp(-exp(dd))."""
+    dd = p["decay_base"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    return jnp.exp(-jnp.exp(dd.astype(jnp.float32) - 0.5))
+
+
+def _wkv_chunk(r, k, v, w, u, s0):
+    """One chunk. r/k/v/w: [B,H,L,hd] f32; u: [H,hd]; s0: [B,H,hd,hd].
+    Returns (out [B,H,L,hd], s_end)."""
+    lw = jnp.log(jnp.maximum(w, 1e-12))
+    cum = jnp.cumsum(lw, axis=2)                        # log P_t
+    p_full = jnp.exp(cum)                               # P_t
+    p_prev = jnp.exp(cum - lw)                          # P_{t-1}
+    r_t = r * p_prev
+    k_t = k * jnp.exp(-cum)                             # k / P_t
+    # intra-chunk scores [B,H,L,L], strictly lower triangular
+    scores = jnp.einsum("bhld,bhmd->bhlm", r_t, k_t)
+    ll = r.shape[2]
+    tri = jnp.tril(jnp.ones((ll, ll), jnp.float32), k=-1)
+    out = jnp.einsum("bhlm,bhmd->bhld", scores * tri, v)
+    # current-token bonus
+    diag = jnp.einsum("bhld,hd,bhld->bhl", r, u, k)
+    out = out + diag[..., None] * v
+    # state input
+    out = out + jnp.einsum("bhli,bhij->bhlj", r_t, s0)
+    # end-of-chunk state
+    s_in = jnp.einsum("bhli,bhlj->bhij", k_t, v)
+    s_end = p_full[:, :, -1, :, None] * (s0 + s_in)
+    return out, s_end
+
+
+def time_mix(cfg: ModelConfig, p: dict, x: jax.Array, x_prev_last: jax.Array,
+             s0: jax.Array, *, chunk: Optional[int] = None):
+    """x: [B,S,D]. x_prev_last: [B,D] final token of previous call.
+    Returns (out [B,S,D], new x_last [B,D], new state)."""
+    b, s, d = x.shape
+    h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    xf = x.astype(jnp.float32)
+    x_shift = jnp.concatenate([x_prev_last[:, None].astype(jnp.float32),
+                               xf[:, :-1]], axis=1)
+    mixed = _ddlerp(p, xf, x_shift)                     # [B,S,5,D]
+    xw, xk, xv, xr, xg = (mixed[:, :, i] for i in range(5))
+
+    w = _decay(p, xw)                                   # [B,S,D] in (0,1)
+    r = (xr.astype(x.dtype) @ p["wr"]).astype(jnp.float32)
+    k = (xk.astype(x.dtype) @ p["wk"]).astype(jnp.float32)
+    v = (xv.astype(x.dtype) @ p["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(xg.astype(x.dtype) @ p["wg"])
+
+    def heads(t):                                        # [B,S,D]->[B,H,S,hd]
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    r, k, v, w = heads(r), heads(k), heads(v), heads(w)
+    u = p["bonus"].astype(jnp.float32)
+
+    ch = min(chunk or cfg.wkv_chunk, s)
+    n = -(-s // ch)
+    pad = n * ch - s
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                    constant_values=1.0)
+
+    def split(t):                                        # [B,H,n*ch,hd]
+        return t.reshape(b, h, n, ch, hd).transpose(2, 0, 1, 3, 4)
+
+    rs, ks, vs, ws = split(r), split(k), split(v), split(w)
+
+    def body(s_c, xs):
+        r_c, k_c, v_c, w_c = xs
+        out_c, s_n = _wkv_chunk(r_c, k_c, v_c, w_c, u, s_c)
+        return s_n, out_c
+
+    s_end, outs = jax.lax.scan(body, s0.astype(jnp.float32),
+                               (rs, ks, vs, ws))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, n * ch, hd)[:, :, :s]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    out = layer_norm(out.astype(x.dtype), p["ln_x"], p["ln_x_b"], cfg.norm_eps)
+    out = (out * g).astype(x.dtype) @ p["wo"]
+    return shard(out, None, None, None), xf[:, -1].astype(x.dtype), s_end
+
+
+def time_mix_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                    x_prev: jax.Array, s0: jax.Array):
+    """Exact one-step recurrence. x: [B,1,D]."""
+    b, _, d = x.shape
+    h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    xf = x.astype(jnp.float32)
+    mixed = _ddlerp(p, xf, x_prev[:, None].astype(jnp.float32))
+    xw, xk, xv, xr, xg = (mixed[:, 0, i] for i in range(5))  # [B,D]
+    w = _decay(p, xw).reshape(b, h, hd)
+    r = (xr.astype(x.dtype) @ p["wr"]).astype(jnp.float32).reshape(b, h, hd)
+    k = (xk.astype(x.dtype) @ p["wk"]).astype(jnp.float32).reshape(b, h, hd)
+    v = (xv.astype(x.dtype) @ p["wv"]).astype(jnp.float32).reshape(b, h, hd)
+    g = jax.nn.silu(xg.astype(x.dtype) @ p["wg"])
+    u = p["bonus"].astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]              # [B,H,dk,dv]
+    out = jnp.einsum("bhi,bhij->bhj", r, s0 + u[None, :, :, None] * kv)
+    s_new = w[..., :, None] * s0 + kv
+    out = out.reshape(b, 1, d)
+    out = layer_norm(out.astype(x.dtype), p["ln_x"], p["ln_x_b"], cfg.norm_eps)
+    out = (out * g[:, None]).astype(x.dtype) @ p["wo"]
+    return out, xf[:, -1].astype(x.dtype), s_new
+
+
+def channel_mix(cfg: ModelConfig, p: dict, x: jax.Array, x_prev_last: jax.Array):
+    xf = x.astype(jnp.float32)
+    x_shift = jnp.concatenate([x_prev_last[:, None].astype(jnp.float32),
+                               xf[:, :-1]], axis=1)
+    dx = x_shift - xf
+    xk = (xf + dx * p["mix_k"]).astype(x.dtype)
+    xr = (xf + dx * p["mix_r"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(shard(xk @ p["wk"], None, None, "model")))
+    rr = jax.nn.sigmoid(xr @ p["wr"])
+    out = rr * shard(kk @ p["wv"], None, None, None)
+    return out.astype(x.dtype), xf[:, -1].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h = cfg.d_model // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    z = lambda *sh: jnp.zeros(sh, jnp.float32)
+    return tuple(
+        {"s": z(batch, h, hd, hd),
+         "x_tm": z(batch, cfg.d_model), "x_cm": z(batch, cfg.d_model)}
+        for _ in range(cfg.num_layers))
+
+
+def state_struct(cfg: ModelConfig, batch: int):
+    h = cfg.d_model // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    f = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.float32)
+    return tuple(
+        {"s": f(batch, h, hd, hd),
+         "x_tm": f(batch, cfg.d_model), "x_cm": f(batch, cfg.d_model)}
+        for _ in range(cfg.num_layers))
+
+
+def _layer(cfg: ModelConfig, lp: dict, x, st, *, decode: bool):
+    h = layer_norm(x, lp["norm_tm"], lp["norm_tm_b"], cfg.norm_eps)
+    if decode:
+        a, x_tm, s_new = time_mix_decode(cfg, lp["tm"], h, st["x_tm"], st["s"])
+    else:
+        a, x_tm, s_new = time_mix(cfg, lp["tm"], h, st["x_tm"], st["s"])
+    x = x + a
+    h = layer_norm(x, lp["norm_cm"], lp["norm_cm_b"], cfg.norm_eps)
+    c, x_cm = channel_mix(cfg, lp["cm"], h, st["x_cm"])
+    return x + c, {"s": s_new, "x_tm": x_tm, "x_cm": x_cm}
+
+
+def _run(cfg: ModelConfig, params: dict, x: jax.Array, states, *,
+         decode: bool = False):
+    if cfg.scan_layers and not decode:
+        # stack the per-layer states for a layer scan
+        st = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+        def body(carry, xs):
+            lp, s_i = xs
+            y, s_n = _layer(cfg, lp, carry, s_i, decode=False)
+            return y, s_n
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, st_new = jax.lax.scan(body, x, (params["layers"], st))
+        n = cfg.num_layers
+        new_states = tuple(jax.tree.map(lambda a, i=i: a[i], st_new)
+                           for i in range(n))
+        return x, new_states
+    new_states = []
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        x, s_n = _layer(cfg, lp, x, states[i], decode=decode)
+        new_states.append(s_n)
+    return x, tuple(new_states)
+
+
+def _embed(cfg, params, tokens):
+    x = embed_lookup(cfg, params["embed"], tokens)
+    return layer_norm(x, params["ln_in"], params["ln_in_b"], cfg.norm_eps)
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    states = init_state(cfg, tokens.shape[0])
+    x, _ = _run(cfg, params, x, states)
+    h = layer_norm(x, params["final_norm"], params["final_norm_b"],
+                   cfg.norm_eps)
+    return chunked_ce_loss(cfg, params["embed"], h[:, :-1], tokens[:, 1:],
+                           batch.get("loss_mask"))
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, states):
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    x, states = _run(cfg, params, x, states)
+    h = layer_norm(x[:, -1:], params["final_norm"], params["final_norm_b"],
+                   cfg.norm_eps)
+    return states, lm_logits(cfg, params["embed"], h)
+
+
+def decode_step(cfg: ModelConfig, params: dict, states, token: jax.Array,
+                pos: jax.Array):
+    x = _embed(cfg, params, token)
+    x, states = _run(cfg, params, x, states, decode=True)
+    h = layer_norm(x, params["final_norm"], params["final_norm_b"],
+                   cfg.norm_eps)
+    return lm_logits(cfg, params["embed"], h), states

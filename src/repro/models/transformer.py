@@ -1,0 +1,229 @@
+"""Decoder-only transformer LM — the chassis for dense / moe / vlm families.
+
+Layers are stacked along a leading "layers" axis and executed with
+``lax.scan`` (flat HLO regardless of depth — essential for the 64-layer
+grok-1 dry-runs). Per-layer heterogeneity (gemma3's 5 local : 1 global
+pattern) is a static per-layer code array scanned alongside the params;
+local/global differ only in window + RoPE theta, so a single param set
+serves both (lax.cond selects the branch).
+
+The FFN is pluggable: dense MLP (models.common.mlp) or MoE (models.moe).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import moe as moe_lib
+from .attention import KVCache, attention_block, attn_defs, cache_spec
+from .common import (ParamDef, chunked_ce_loss, embed_defs, embed_lookup,
+                     mlp, mlp_defs, rms_norm, shard)
+
+
+def _stack(defs: Any, n: int) -> Any:
+    """Prepend a 'layers' axis to every ParamDef in a layer's def tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _ffn_defs(cfg: ModelConfig) -> dict:
+    return moe_lib.moe_defs(cfg) if cfg.family == "moe" else mlp_defs(cfg)
+
+
+def _ffn_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    if cfg.family == "moe":
+        return moe_lib.moe_ffn(cfg, p, x)
+    return mlp(cfg, p, x), jnp.float32(0.0)
+
+
+def layer_defs(cfg: ModelConfig) -> dict:
+    return {
+        "attn": attn_defs(cfg),
+        "ffn": _ffn_defs(cfg),
+        "norm_attn": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        "norm_ffn": ParamDef((cfg.d_model,), (None,), init="zeros"),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": embed_defs(cfg),
+        "layers": _stack(layer_defs(cfg), cfg.num_layers),
+        "final_norm": ParamDef((cfg.d_model,), (None,), init="zeros"),
+    }
+
+
+def _layer(cfg: ModelConfig, p: dict, x: jax.Array, code: jax.Array, *,
+           positions, prefix_len, cache, decode_pos, fill_cache):
+    """One transformer layer; ``code``: 0 = global/full, 1 = local/SWA."""
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+
+    def attn_with(window, theta):
+        def fn(h_):
+            return attention_block(
+                cfg, p["attn"], h_, positions=positions, theta=theta,
+                window=window, prefix_len=prefix_len, cache=cache,
+                decode_pos=decode_pos, fill_cache=fill_cache,
+                softcap=cfg.attn_logit_softcap,
+                differentiable=not fill_cache)
+        return fn
+
+    g_theta = cfg.rope_theta_global or cfg.rope_theta
+    if cfg.window_size is None:
+        a = attn_with(None, g_theta)(h)
+    elif cfg.layer_pattern is None:
+        a = attn_with(cfg.window_size, cfg.rope_theta)(h)
+    elif isinstance(code, int):   # unrolled serving path: static dispatch
+        a = (attn_with(cfg.window_size, cfg.rope_theta) if code == 1
+             else attn_with(None, g_theta))(h)
+    else:
+        a = jax.lax.cond(code == 1,
+                         attn_with(cfg.window_size, cfg.rope_theta),
+                         attn_with(None, g_theta), h)
+    x = x + a.out
+    h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+    f, aux = _ffn_apply(cfg, p["ffn"], h)
+    return x + f, a.cache, aux
+
+
+class Carry(NamedTuple):
+    x: jax.Array
+
+
+def _run_layers(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                positions, prefix_len=None, caches=None, decode_pos=None,
+                fill_cache=False):
+    """Run the stacked layers.
+
+    Train (caches is None): lax.scan over the stacked params — flat HLO.
+    Serve (caches given): unrolled Python loop so each layer keeps its own
+    cache capacity (ring-buffer for SWA layers, full-length for global) —
+    this is what keeps gemma3 long-context caches sub-quadratic.
+    """
+    codes = jnp.asarray(cfg.pattern_codes(), jnp.int32)
+
+    if caches is None:
+        def body(carry, xs):
+            lp, code = xs
+            y, _, aux = _layer(
+                cfg, lp, carry, code, positions=positions,
+                prefix_len=prefix_len, cache=None, decode_pos=None,
+                fill_cache=False)
+            return y, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            x, auxs = jax.lax.scan(body, x, (params["layers"], codes))
+            return x, None, jnp.sum(auxs)
+        aux = jnp.float32(0.0)
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a_i = body(x, (lp, codes[i]))
+            aux = aux + a_i
+        return x, None, aux
+
+    windows = _layer_windows(cfg)
+    static_codes = cfg.pattern_codes()
+    new_caches, aux = [], jnp.float32(0.0)
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        # ring semantics degenerate to linear when capacity == seq_len
+        cache = KVCache(caches[i]["k"], caches[i]["v"],
+                        ring=windows[i] is not None)
+        y, nc, a_i = _layer(cfg, lp, x, static_codes[i], positions=positions,
+                            prefix_len=prefix_len, cache=cache,
+                            decode_pos=decode_pos, fill_cache=fill_cache)
+        x, aux = y, aux + a_i
+        new_caches.append({"k": nc.k, "v": nc.v})
+    return x, tuple(new_caches), aux
+
+
+def hidden_states(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                  prefix_embeds: Optional[jax.Array] = None):
+    """Train-mode forward -> (hidden [B,S',D], aux, prefix_len or None)."""
+    x = embed_lookup(cfg, params["embed"], tokens)
+    prefix_len = None
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = int(prefix_embeds.shape[1])
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _run_layers(cfg, params, x, positions=positions,
+                            prefix_len=prefix_len)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux, prefix_len
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    tokens = batch["tokens"]
+    h, aux, _ = hidden_states(cfg, params, tokens,
+                              batch.get("prefix_embeds"))
+    if "prefix_embeds" in batch:
+        p = batch["prefix_embeds"].shape[1]
+        h = h[:, p:]
+    ce = chunked_ce_loss(cfg, params["embed"], h[:, :-1], tokens[:, 1:],
+                         batch.get("loss_mask"))
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _layer_windows(cfg: ModelConfig) -> list[Optional[int]]:
+    codes = cfg.pattern_codes()
+    return [cfg.window_size if (c == 1 and cfg.window_size) else None
+            for c in codes]
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    """Per-layer KV caches: ring-buffer capacity == window for SWA layers,
+    full seq_len for global layers."""
+    dtype = dtype or cfg.dtype
+    out = []
+    for w in _layer_windows(cfg):
+        shape, _ = cache_spec(cfg, batch, seq_len, w)
+        out.append({"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)})
+    return tuple(out)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    out = []
+    for w in _layer_windows(cfg):
+        shape, _ = cache_spec(cfg, batch, seq_len, w)
+        out.append({"k": jax.ShapeDtypeStruct(shape, dtype),
+                    "v": jax.ShapeDtypeStruct(shape, dtype)})
+    return tuple(out)
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cache):
+    """Fill the cache from a prompt; returns (cache, last-token logits)."""
+    tokens = batch["tokens"]
+    x = embed_lookup(cfg, params["embed"], tokens)
+    prefix_len = None
+    if "prefix_embeds" in batch:
+        x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], 1)
+        prefix_len = int(batch["prefix_embeds"].shape[1])
+    positions = jnp.arange(x.shape[1])
+    x, cache, _ = _run_layers(cfg, params, x, positions=positions,
+                              prefix_len=prefix_len, caches=cache,
+                              fill_cache=True)
+    h = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    from .common import lm_logits
+    return cache, lm_logits(cfg, params["embed"], h)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache, token: jax.Array,
+                pos: jax.Array):
+    """One decode step. token: [B,1] i32; pos: scalar i32 absolute position."""
+    x = embed_lookup(cfg, params["embed"], token)
+    positions = pos[None] if pos.ndim == 0 else pos
+    x, cache, _ = _run_layers(cfg, params, x, positions=positions,
+                              caches=cache, decode_pos=pos)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    from .common import lm_logits
+    return lm_logits(cfg, params["embed"], h), cache

@@ -1,0 +1,2 @@
+from .trainer import TrainState, Trainer, make_train_step
+from .serve import make_decode_step, make_prefill_step

@@ -1,0 +1,150 @@
+"""Serving steps: prefill (fill a KV cache from a prompt batch) and decode
+(ONE token against a seq_len cache), with mesh shardings.
+
+No gradient sync => no RGC here; these are plain jit with in/out shardings.
+
+Sharding policy (adaptive, per tensor):
+  * batch dim shards over the batch axes when divisible (decode_32k: 128
+    over 16/32); batch=1 long-context shapes replicate it.
+  * the model axis lands on the kv-head / lru / state dim when divisible,
+    else on the sequence dim of the KV cache (grok kv=8 < 16-way model axis
+    -> 32k cache seq shards over model; this is the TPU sequence-parallel
+    KV layout).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.registry import Model
+
+
+def _batch_axes(mesh: Optional[Mesh]) -> tuple[str, ...]:
+    if mesh is None:
+        return ()
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fits(dim: int, k: int) -> bool:
+    return k > 1 and dim % k == 0
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """Leading-dim batch sharding if divisible, else replicated."""
+    baxes = _batch_axes(mesh)
+    sizes = _axis_sizes(mesh)
+    bsize = math.prod(sizes[a] for a in baxes) if baxes else 1
+    return P(baxes) if _fits(batch, bsize) else P()
+
+
+def _cache_leaf_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    baxes = _batch_axes(mesh)
+    sizes = _axis_sizes(mesh)
+    bsize = math.prod(sizes[a] for a in baxes) if baxes else 1
+    msize = sizes.get("model", 1)
+    spec: list[Any] = [None] * len(shape)
+    if shape and _fits(shape[0], bsize):
+        spec[0] = baxes
+    if len(shape) == 4:                       # [B,C,Hkv,hd] or [B,H,dk,dv]
+        if _fits(shape[2], msize):
+            spec[2] = "model"
+        elif _fits(shape[1], msize):
+            spec[1] = "model"
+    elif len(shape) == 3 and _fits(shape[2], msize):   # [B,cw-1,lru]
+        spec[2] = "model"
+    elif len(shape) == 2 and _fits(shape[1], msize):   # [B,lru] / lstm h,c
+        spec[1] = "model"
+    return P(*spec)
+
+
+def cache_shardings(model: Model, mesh: Mesh, batch: int, seq_len: int):
+    struct = model.cache_struct(batch, seq_len)
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, _cache_leaf_spec(leaf.shape, mesh)),
+        struct)
+
+
+def _gspmd_auto(fn):
+    """Trace with activation constraints disabled (GSPMD propagates from
+    the in/out shardings; see models.common.no_activation_constraints)."""
+    from repro.models.common import no_activation_constraints
+
+    def wrapped(*args):
+        with no_activation_constraints():
+            return fn(*args)
+    return wrapped
+
+
+def make_prefill_step(model: Model, mesh: Optional[Mesh],
+                      pc: ParallelConfig, batch: int, seq_len: int):
+    """jitted (params, batch, cache) -> (cache, last-token logits)."""
+    if mesh is None:
+        return jax.jit(model.prefill)
+    bshard = NamedSharding(mesh, batch_spec(mesh, batch))
+    cshard = cache_shardings(model, mesh, batch, seq_len)
+    batch_shardings = {k: bshard for k in model.train_inputs(1, 1)}
+    from repro.models.common import param_specs
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          param_specs(model.param_defs(), pc, mesh),
+                          is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(
+        _gspmd_auto(model.prefill),
+        in_shardings=(pshard, batch_shardings, cshard),
+        out_shardings=(cshard, bshard),
+        donate_argnums=(2,),          # cache updated in place
+    )
+
+
+def make_decode_step(model: Model, mesh: Optional[Mesh],
+                     pc: ParallelConfig, batch: int, seq_len: int):
+    """jitted (params, cache, token, pos) -> (logits, cache)."""
+    if mesh is None:
+        return jax.jit(model.decode_step)
+    bshard = NamedSharding(mesh, batch_spec(mesh, batch))
+    cshard = cache_shardings(model, mesh, batch, seq_len)
+    from repro.models.common import param_specs
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          param_specs(model.param_defs(), pc, mesh),
+                          is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(
+        _gspmd_auto(model.decode_step),
+        in_shardings=(pshard, cshard, bshard, NamedSharding(mesh, P())),
+        out_shardings=(bshard, cshard),
+        donate_argnums=(1,),          # cache updated in place
+    )
+
+
+class ServeLoop:
+    """Minimal batched-request serving driver (greedy decode)."""
+
+    def __init__(self, model: Model, mesh: Optional[Mesh] = None,
+                 pc: Optional[ParallelConfig] = None, *, batch: int,
+                 max_len: int):
+        self.model = model
+        self.batch, self.max_len = batch, max_len
+        self.prefill = make_prefill_step(model, mesh, pc or ParallelConfig(),
+                                         batch, max_len)
+        self.decode = make_decode_step(model, mesh, pc or ParallelConfig(),
+                                       batch, max_len)
+
+    def generate(self, params, prompt_batch: dict, num_tokens: int):
+        prompt_len = prompt_batch["tokens"].shape[1]
+        cache = self.model.init_cache(self.batch, self.max_len)
+        cache, logits = self.prefill(params, prompt_batch, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [tok]
+        for i in range(num_tokens - 1):
+            logits, cache = self.decode(params, cache, tok,
+                                        jnp.int32(prompt_len + i))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

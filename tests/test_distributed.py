@@ -1,0 +1,32 @@
+"""Multi-device distribution tests.
+
+These need XLA_FLAGS=--xla_force_host_platform_device_count=8, which must be
+set before jax initializes — so each case runs tests/_dist_prog.py in a
+subprocess (the main pytest process keeps its single-device view, per the
+project rule of never forcing device counts globally)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_PROG = os.path.join(os.path.dirname(__file__), "_dist_prog.py")
+
+
+def _run(case: str) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    proc = subprocess.run([sys.executable, _PROG, case],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{case} failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n"
+            f"{proc.stderr[-3000:]}")
+    assert "OK" in proc.stdout
+
+
+@pytest.mark.parametrize("case", ["dense", "oracle", "variants", "multipod"])
+def test_distributed(case):
+    _run(case)

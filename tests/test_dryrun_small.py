@@ -1,0 +1,18 @@
+"""Integration: the dry-run machinery (lower + compile + cost/collective
+extraction) on a small host mesh, via subprocess (device-count flag)."""
+import os
+import subprocess
+import sys
+
+
+def test_dryrun_small_mesh():
+    prog = os.path.join(os.path.dirname(__file__), "_dryrun_prog.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    proc = subprocess.run([sys.executable, prog], capture_output=True,
+                          text=True, env=env, timeout=900)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"dryrun small-mesh failed:\n{proc.stdout}\n{proc.stderr[-3000:]}")
+    assert "OK" in proc.stdout

@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles (ref.py): shape/dtype sweeps,
+interpret=True on CPU (TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection as sel
+from repro.kernels import ops, ref
+from repro.kernels.block_stats import abs_sum_max
+from repro.kernels.compact import compact_gt
+from repro.kernels.threshold_count import count_gt
+from repro.kernels.residual_update import residual_update
+
+SHAPES = [(4, 128), (8, 256), (3, 1024), (16, 512), (1, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _x2d(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+class TestBlockStats:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_abs_sum_max(self, shape, dtype):
+        x = _x2d(shape, dtype)
+        s, m = abs_sum_max(x, interpret=True)
+        s_ref, m_ref = ref.abs_sum_max(x)
+        np.testing.assert_allclose(s, s_ref, rtol=2e-2 if dtype == jnp.bfloat16
+                                   else 1e-5)
+        np.testing.assert_allclose(m, m_ref, rtol=1e-6)
+
+
+class TestCountGt:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("thr", [0.0, 0.5, 1.5, 10.0])
+    def test_count(self, shape, thr):
+        x = _x2d(shape, jnp.float32, seed=shape[1])
+        got = count_gt(x, jnp.float32(thr), interpret=True)
+        want = ref.count_gt(x, jnp.float32(thr))
+        assert int(got) == int(want)
+
+
+class TestCompactGt:
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_against_oracle(self, shape):
+        nb, block = shape
+        n = nb * block
+        x = _x2d((n,), jnp.float32, seed=n)
+        thr = jnp.float32(1.0)
+        cap = 32
+        vals, idx, counts = compact_gt(x.reshape(nb, block), thr, cap, n,
+                                       interpret=True)
+        v_ref, i_ref, c_ref = ref.compact_gt(x, thr, block, cap)
+        np.testing.assert_array_equal(counts, c_ref)
+        np.testing.assert_array_equal(idx, i_ref)
+        np.testing.assert_allclose(vals, v_ref)
+
+    def test_partial_final_block(self):
+        """n not a multiple of block: padding indices must be == n."""
+        n, block, cap = 300, 128, 16
+        x = _x2d((n,), jnp.float32, seed=1)
+        x2, _ = ops._to2d(x, block)
+        vals, idx, counts = compact_gt(x2, jnp.float32(0.8), cap, n,
+                                       interpret=True)
+        flat = np.asarray(idx).reshape(-1)
+        assert np.all((flat < n) | (flat == n))
+
+
+class TestResidualUpdate:
+    @pytest.mark.parametrize("momentum", [0.0, 0.9])
+    @pytest.mark.parametrize("nesterov", [False, True])
+    @pytest.mark.parametrize("shape", [(256,), (33, 17), (4, 8, 16)])
+    def test_fused_update(self, momentum, nesterov, shape):
+        rng = np.random.default_rng(3)
+        g = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        u = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        v = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        u_new, v_new = ops.residual_update(g, u, v, momentum=momentum,
+                                           nesterov=nesterov)
+        u_ref, v_ref = ref.residual_update(g, u, v, momentum=momentum,
+                                           nesterov=nesterov)
+        np.testing.assert_allclose(u_new, u_ref, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(v_new, v_ref, rtol=1e-5, atol=1e-6)
+
+
+class TestKernelSelectors:
+    """ops.py composite selectors must agree with core/selection.py."""
+
+    @pytest.mark.parametrize("n,k", [(1000, 5), (5000, 13), (20000, 20)])
+    def test_trimmed_topk_matches_jnp(self, n, k):
+        x = _x2d((n,), jnp.float32, seed=n)
+        got = ops.trimmed_topk(x, k)
+        want = sel.trimmed_topk(x, k)
+        assert set(map(int, got.indices)) == set(map(int, want.indices))
+        got_vals = sorted(map(float, got.values))
+        want_vals = sorted(map(float, want.values))
+        np.testing.assert_allclose(got_vals, want_vals, rtol=1e-6)
+
+    @pytest.mark.parametrize("n,k", [(1000, 5), (8192, 16)])
+    def test_bsearch_matches_jnp(self, n, k):
+        x = _x2d((n,), jnp.float32, seed=n + 1)
+        got, thr_g = ops.threshold_binary_search(x, k)
+        want, thr_w = sel.threshold_binary_search(x, k)
+        np.testing.assert_allclose(thr_g, thr_w, rtol=1e-5)
+        assert int(got.count) == int(want.count)
+        c = int(got.count)
+        assert (set(map(int, np.asarray(got.indices)[:c]))
+                == set(map(int, np.asarray(want.indices)[:c])))
+
+    def test_rgc_pallas_backend_end_to_end(self):
+        """rgc_apply(backend='pallas') produces the same update as jnp."""
+        from repro.core.rgc import RGCConfig, rgc_apply, rgc_init
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.asarray(rng.standard_normal((600, 70)),
+                                   jnp.float32)}
+        grads = {"w": jnp.asarray(rng.standard_normal((600, 70)),
+                                  jnp.float32)}
+        outs = {}
+        for backend in ("jnp", "pallas"):
+            cfg = RGCConfig(density=0.001, sync_axes=(), backend=backend,
+                            dense_threshold_bytes=1024)
+            state = rgc_init(params, cfg)
+            new_p, _ = rgc_apply(grads, params, state, lr=jnp.float32(0.1),
+                                 cfg=cfg)
+            outs[backend] = np.asarray(new_p["w"])
+        np.testing.assert_allclose(outs["jnp"], outs["pallas"], rtol=1e-6)

@@ -1,0 +1,150 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection as sel
+from repro.core import sync
+from repro.core.cost_model import (MURADIN, PIZ_DAINT, TPU_V5E, bandwidth_ratio,
+                                   choose_method, t_dense, t_sparse)
+
+_settings = settings(max_examples=30, deadline=None)
+
+
+def vec_and_k():
+    return st.integers(10, 2000).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.integers(1, max(1, n // 4)),
+            st.integers(0, 2**31 - 1)))
+
+
+@given(vec_and_k())
+@_settings
+def test_trimmed_topk_is_exact_topk(args):
+    """Alg 2 invariant: the trimmed selection equals the exact top-k set."""
+    n, k, seed = args
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = sel.trimmed_topk(x, k)
+    want = sel.exact_topk(x, k)
+    assert set(map(int, got.indices)) == set(map(int, want.indices))
+
+
+@given(vec_and_k())
+@_settings
+def test_bsearch_invariants(args):
+    """Alg 3 invariants: (a) indices valid; (b) count <= 2k; (c) the top-k
+    set is always contained; (d) padded slots carry sentinel index."""
+    n, k, seed = args
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    s, thr = sel.threshold_binary_search(x, k)
+    cnt = int(s.count)
+    idx = np.asarray(s.indices)
+    assert 1 <= cnt <= 2 * k
+    assert np.all((idx[:cnt] >= 0) & (idx[:cnt] < n))
+    assert np.all(idx[cnt:] == n)
+    top = set(map(int, sel.exact_topk(x, min(k, cnt)).indices))
+    assert top <= set(map(int, idx[:cnt]))
+
+
+@given(vec_and_k(), st.booleans())
+@_settings
+def test_pack_unpack_roundtrip(args, quantized):
+    """decompress(pack(sel)) scatters exactly the selected (or quantized)
+    values — the single-worker sparse-sync identity."""
+    n, k, seed = args
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    if quantized:
+        s = sel.exact_topk_quant(x, k, jnp.int32(seed % 2))
+    else:
+        s = sel.exact_topk(x, k)
+    msg = sync.pack(s, quantized)
+    dense = sync.unpack_decompress(msg[None], n, s.indices.shape[0],
+                                   quantized)
+    expect = np.zeros(n, np.float32)
+    cnt = int(s.count)
+    idx = np.asarray(s.indices)[:cnt]
+    vals = np.asarray(s.values)[:cnt]
+    np.add.at(expect, idx, vals)
+    np.testing.assert_allclose(np.asarray(dense), expect, rtol=1e-6,
+                               atol=1e-7)
+
+
+@given(st.lists(st.integers(5, 200), min_size=1, max_size=6),
+       st.integers(0, 2**31 - 1))
+@_settings
+def test_fused_allgather_split_roundtrip(lens, seed):
+    """Tensor fusion: concat -> (1-worker) allgather -> split restores every
+    per-leaf segment bit-exactly."""
+    rng = np.random.default_rng(seed)
+    msgs = [jnp.asarray(rng.standard_normal(l), jnp.float32) for l in lens]
+    out = sync.fused_allgather(msgs, axes=())
+    for m, o in zip(msgs, out):
+        assert o.shape == (1, m.shape[0])
+        np.testing.assert_array_equal(np.asarray(o[0]), np.asarray(m))
+
+
+@given(st.integers(2, 1024), st.floats(1e-4, 0.05),
+       st.sampled_from([MURADIN, PIZ_DAINT, TPU_V5E]))
+@_settings
+def test_cost_model_positive_and_monotone(p, density, net):
+    m = 64 * 1024 * 1024 // 4
+    ts = t_sparse(p, m, density, net)
+    td = t_dense(p, m, net)
+    assert ts > 0 and td > 0
+    # sparse bandwidth term grows with p (the paper's §5.5 observation)
+    if p >= 4:
+        assert t_sparse(2 * p, m, density, net) > ts
+
+
+@given(st.integers(2, 4096))
+@_settings
+def test_bandwidth_ratio_formula(p):
+    """§5.5: sparse/dense bandwidth ratio = p*D/2 — model compression is NOT
+    wire compression (p=128, D=0.1% -> 6.4%)."""
+    d = 0.001
+    np.testing.assert_allclose(bandwidth_ratio(p, d), p * d / 2, rtol=1e-9)
+
+
+@given(st.integers(1, 10**9))
+@_settings
+def test_choose_method_total(nbytes):
+    m = choose_method(nbytes)
+    assert m in ("dense", "trimmed_topk", "threshold_binary_search")
+    if nbytes < 128 * 1024:
+        assert m == "dense"
+    elif nbytes < 4 * 1024 * 1024:
+        assert m == "trimmed_topk"
+    else:
+        assert m == "threshold_binary_search"
+
+
+@given(st.integers(10, 500), st.integers(1, 20), st.integers(0, 2**31 - 1))
+@_settings
+def test_quantized_message_halves_payload(n, k, seed):
+    """§5.2.3: quantized wire message = count + indices + ONE scalar."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    k = min(k, n)
+    s = sel.exact_topk_quant(x, k, jnp.int32(0))
+    assert sync.pack(s, True).shape[0] == 1 + k + 1
+    assert sync.pack(s, False).shape[0] == 1 + 2 * k
+
+
+@given(st.integers(64, 4000), st.integers(1, 40), st.integers(0, 2**31 - 1),
+       st.sampled_from([128, 256, 1024]))
+@settings(max_examples=15, deadline=None)
+def test_pallas_trimmed_topk_matches_exact(n, k, seed, block):
+    """Kernel-path trimmed top-k == exact top-k set for arbitrary shapes,
+    block sizes and ks (stresses the bucket-overflow fallback)."""
+    from repro.kernels import ops
+    k = min(k, n // 2 + 1)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = ops.trimmed_topk(x, k, block=block)
+    want = sel.exact_topk(x, k)
+    assert set(map(int, got.indices)) == set(map(int, want.indices))

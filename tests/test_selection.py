@@ -1,0 +1,108 @@
+"""Unit tests for the communication-set selectors (Algorithms 2/3, §5.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection as sel
+
+
+def _vec(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+
+class TestExactTopK:
+    def test_matches_numpy(self):
+        x = _vec(1000)
+        s = sel.exact_topk(x, 10)
+        ref = np.argsort(-np.abs(np.asarray(x)))[:10]
+        assert set(map(int, s.indices)) == set(map(int, ref))
+        np.testing.assert_allclose(np.asarray(x)[s.indices], s.values)
+        assert int(s.count) == 10
+
+
+class TestTrimmedTopK:
+    @pytest.mark.parametrize("n,k", [(100, 5), (1000, 10), (4096, 4),
+                                     (10000, 100), (257, 7)])
+    def test_selects_exact_topk_set(self, n, k):
+        """Alg 2 trims then exact-selects: result == exact top-k set."""
+        x = _vec(n, seed=n + k)
+        s = sel.trimmed_topk(x, k)
+        ref = sel.exact_topk(x, k)
+        assert set(map(int, s.indices)) == set(map(int, ref.indices))
+        assert int(s.count) == k
+
+    def test_constant_input(self):
+        """Degenerate stats (max == mean) must not loop forever."""
+        x = jnp.ones(256)
+        s = sel.trimmed_topk(x, 3)
+        assert int(s.count) == 3
+        assert np.all(np.asarray(s.values) == 1.0)
+
+
+class TestThresholdBinarySearch:
+    @pytest.mark.parametrize("n,k", [(1000, 10), (4096, 40), (50000, 50)])
+    def test_count_in_band(self, n, k):
+        x = _vec(n, seed=n)
+        s, thr = sel.threshold_binary_search(x, k)
+        cnt = int(s.count)
+        # the paper's termination: k <= nnz <= 2k (or search exhausted)
+        assert cnt >= 1 and cnt <= 2 * k
+        assert s.indices.shape[0] == 2 * k
+        # every selected element exceeds the returned threshold
+        vals = np.asarray(s.values)[:cnt]
+        assert np.all(np.abs(vals) > float(thr))
+
+    def test_selected_superset_of_topk(self):
+        """>= k largest elements always included (paper's guarantee
+        'at least k largest elements included in the communication-set')."""
+        x = _vec(2048, seed=7)
+        k = 16
+        s, _ = sel.threshold_binary_search(x, k)
+        top = set(map(int, sel.exact_topk(x, k).indices))
+        got = set(map(int, np.asarray(s.indices)[: int(s.count)]))
+        assert top <= got
+
+    def test_threshold_reuse_filter(self):
+        x = _vec(1024, seed=3)
+        k = 8
+        s, thr = sel.threshold_binary_search(x, k)
+        s2 = sel.threshold_filter(x, thr, capacity=2 * k)
+        assert int(s2.count) == int(s.count)
+        assert set(map(int, np.asarray(s2.indices)[: int(s2.count)])) == \
+            set(map(int, np.asarray(s.indices)[: int(s.count)]))
+
+
+class TestQuantized:
+    def test_same_sign_phases(self):
+        x = _vec(512, seed=1)
+        for fn in (sel.exact_topk_quant,
+                   lambda x, k, p: sel.trimmed_topk_quant(x, k, p),
+                   lambda x, k, p: sel.threshold_binary_search_quant(x, k, p)):
+            pos = fn(x, 8, jnp.int32(0))
+            neg = fn(x, 8, jnp.int32(1))
+            vp = np.asarray(pos.values)[np.asarray(pos.indices) < x.size]
+            vn = np.asarray(neg.values)[np.asarray(neg.indices) < x.size]
+            assert np.all(vp >= 0), "phase 0 must select positives"
+            assert np.all(vn <= 0), "phase 1 must select negatives"
+
+    def test_mean_broadcast(self):
+        """Quantized values are the mean of the selected set (§5.2.3)."""
+        x = _vec(256, seed=2)
+        s = sel.exact_topk_quant(x, 4, jnp.int32(0))
+        raw = sel._signed_score(x, jnp.int32(0))
+        _, idx = jax.lax.top_k(raw, 4)
+        expect = float(jnp.mean(x[idx]))
+        got = np.asarray(s.values)[np.asarray(s.indices) < x.size]
+        np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+def test_jit_compatible():
+    x = _vec(2048)
+    f = jax.jit(lambda v: sel.trimmed_topk(v, 8))
+    s = f(x)
+    assert int(s.count) == 8
+    g = jax.jit(lambda v: sel.threshold_binary_search(v, 8))
+    s2, thr = g(x)
+    assert s2.indices.shape == (16,)

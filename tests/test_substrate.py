@@ -1,0 +1,137 @@
+"""Substrate tests: data pipeline determinism, checkpointing, HLO
+collective parsing, cost model numerics."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.core.cost_model import (PIZ_DAINT, TPU_V5E, speedup, t_dense,
+                                   t_sparse)
+from repro.data import SyntheticLM, bigram_batches
+from repro.data.synthetic import bigram_entropy, bigram_transition
+from repro.launch.hlo_stats import collective_summary, parse_collectives
+
+
+class TestData:
+    def test_synthetic_deterministic_resume(self):
+        a = SyntheticLM(1000, 4, 16, seed=7)
+        b = SyntheticLM(1000, 4, 16, seed=7)
+        np.testing.assert_array_equal(a.batch_at(5)["tokens"],
+                                      b.batch_at(5)["tokens"])
+        it = iter(a)
+        first = [next(it)["tokens"] for _ in range(3)]
+        np.testing.assert_array_equal(first[2], a.batch_at(2)["tokens"])
+
+    def test_tokens_in_range(self):
+        s = SyntheticLM(50, 8, 64, seed=0)
+        t = s.batch_at(0)["tokens"]
+        assert t.min() >= 0 and t.max() < 50
+
+    def test_bigram_learnable_floor(self):
+        trans = bigram_transition(64, seed=0)
+        h = bigram_entropy(trans)
+        assert 0 < h < np.log(64)          # below uniform entropy
+        # empirical next-token distribution matches the chain
+        it = bigram_batches(64, 16, 256, seed=0)
+        toks = next(it)["tokens"]
+        assert toks.shape == (16, 256)
+
+    def test_bigram_deterministic(self):
+        a = next(iter(bigram_batches(32, 2, 16, seed=3)))["tokens"]
+        b = next(iter(bigram_batches(32, 2, 16, seed=3)))["tokens"]
+        np.testing.assert_array_equal(a, b)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+        save(str(tmp_path), 3, tree)
+        assert latest_step(str(tmp_path)) == 3
+        out = restore(str(tmp_path), tree)
+        np.testing.assert_array_equal(out["a"], tree["a"])
+        assert out["b"]["c"].dtype == jnp.bfloat16
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save(str(tmp_path), 1, {"w": jnp.ones((3,))})
+        with pytest.raises(ValueError):
+            restore(str(tmp_path), {"w": jnp.ones((4,))})
+
+    def test_missing_leaf_raises(self, tmp_path):
+        save(str(tmp_path), 1, {"w": jnp.ones((3,))})
+        with pytest.raises(KeyError):
+            restore(str(tmp_path), {"w": jnp.ones((3,)),
+                                    "extra": jnp.ones((1,))})
+
+    def test_multiple_steps(self, tmp_path):
+        for s in (1, 5, 3):
+            save(str(tmp_path), s, {"w": jnp.full((2,), float(s))})
+        assert latest_step(str(tmp_path)) == 5
+        out = restore(str(tmp_path), {"w": jnp.zeros((2,))})
+        np.testing.assert_array_equal(out["w"], [5.0, 5.0])
+
+
+class TestHloStats:
+    SAMPLE = """
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[64,128]{1,0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(%z), replica_groups={{0,1}}, to_apply=%add
+  %cp = f32[16]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %other = f32[8]{0} add(%a, %b)
+"""
+
+    def test_parse(self):
+        colls = parse_collectives(self.SAMPLE)
+        ops = sorted(c.op for c in colls)
+        assert ops == ["all-gather", "all-reduce", "collective-permute",
+                       "reduce-scatter"]
+        ar = next(c for c in colls if c.op == "all-reduce")
+        assert ar.result_bytes == 1024 * 512 * 4
+        assert ar.group_size == 4
+        assert ar.wire_bytes == int(2 * 3 / 4 * ar.result_bytes)
+        ag = next(c for c in colls if c.op == "all-gather")
+        assert ag.group_size == 8
+        assert ag.result_bytes == 64 * 128 * 2
+
+    def test_summary(self):
+        s = collective_summary(self.SAMPLE)
+        assert s["total_count"] == 4
+        assert s["total_wire_bytes"] > 0
+        assert set(s["by_op"]) == {"all-gather", "all-reduce",
+                                   "collective-permute", "reduce-scatter"}
+
+    def test_async_start_done_counted_once(self):
+        txt = """
+  %ags = (f32[8]{0}, f32[32]{0}) all-gather-start(%x), replica_groups={{0,1,2,3}}
+  %agd = f32[32]{0} all-gather-done(%ags)
+"""
+        colls = parse_collectives(txt)
+        assert len(colls) == 1
+
+
+class TestCostModel:
+    def test_eq1_eq2_regime(self):
+        """Comm-bound nets speed up; the sparse bandwidth term scales with
+        (p-1)*M*D (the paper's central observation)."""
+        m = 128 * 1024 * 1024 // 4          # 128 MB model (VGG-ish)
+        assert speedup(8, m, 0.001, PIZ_DAINT) > 1.0
+        # at fixed D, scaling p erodes the advantage (concave speedup)
+        s16 = speedup(16, m, 0.001, PIZ_DAINT)
+        s1024 = speedup(1024, m, 0.001, PIZ_DAINT)
+        assert s1024 < s16
+
+    def test_quantized_halves_bandwidth_term(self):
+        m = 16 * 1024 * 1024
+        tq = t_sparse(64, m, 0.001, TPU_V5E, quantized=True)
+        tf = t_sparse(64, m, 0.001, TPU_V5E, quantized=False)
+        assert tq < tf
+
+    def test_dense_indep_of_p_asymptotically(self):
+        m = 64 * 1024 * 1024
+        d128 = t_dense(128, m, PIZ_DAINT)
+        d256 = t_dense(256, m, PIZ_DAINT)
+        assert abs(d128 - d256) / d128 < 0.02
