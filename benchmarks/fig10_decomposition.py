@@ -20,9 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import selection as sel
-from repro.core import sync
+from repro.core import registry
 from repro.core.cost_model import PIZ_DAINT
+from repro.core.residual import init_leaf
 
 
 def modeled_shares(size_mb: float, p: int, density=0.001, net=PIZ_DAINT):
@@ -42,12 +42,14 @@ def measured_unpack_growth(n=4_000_000, density=0.001,
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal(n), jnp.float32)
     k = max(1, int(n * density))
-    s = sel.trimmed_topk(x, k)
-    msg = sync.pack(s, False)
+    comp = registry.make(registry.COMPRESSOR, "trimmed_topk")
+    transport = registry.make(registry.TRANSPORT, "fused_allgather")
+    s, _ = comp.compress(x, k, init_leaf(x, momentum=False))
+    msg = transport.pack(s, comp.quantized)
     rows = []
     for p in ps:
         gathered = jnp.tile(msg[None], (p, 1))
-        f = jax.jit(lambda g: sync.unpack_decompress(g, n, k, False))
+        f = jax.jit(lambda g: comp.decompress(g, n, k))
         jax.block_until_ready(f(gathered))
         t0 = time.perf_counter()
         for _ in range(iters):

@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import selection as sel
+from repro.core import registry
 from repro.core.cost_model import MURADIN
+from repro.core.residual import init_leaf
 
 
 def _time(fn, *args, iters=5) -> float:
@@ -31,6 +32,18 @@ def _time(fn, *args, iters=5) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+def _time_compressor(name: str, x: jax.Array, k: int, iters: int) -> float:
+    """Time one registry compressor's compress() on a fresh leaf state.
+
+    A fresh state has interval == 0, so threshold_bsearch always takes the
+    refresh (full binary search) branch — the cost Fig 3 measures.
+    """
+    comp = registry.make(registry.COMPRESSOR, name)
+    st = init_leaf(x, momentum=False)
+    return _time(jax.jit(lambda v, s: comp.compress(v, k, s)), x, st,
+                 iters=iters)
+
+
 def run(sizes_mb=(1, 4, 16, 64), density=0.001, iters=5):
     rows = []
     for mb in sizes_mb:
@@ -38,12 +51,9 @@ def run(sizes_mb=(1, 4, 16, 64), density=0.001, iters=5):
         k = max(1, int(n * density))
         x = jnp.asarray(np.random.default_rng(0).standard_normal(n),
                         jnp.float32)
-        t_exact = _time(jax.jit(lambda v: sel.exact_topk(v, k)), x,
-                        iters=iters)
-        t_trim = _time(jax.jit(lambda v: sel.trimmed_topk(v, k)), x,
-                       iters=iters)
-        t_bs = _time(jax.jit(lambda v: sel.threshold_binary_search(v, k)), x,
-                     iters=iters)
+        t_exact = _time_compressor("exact_topk", x, k, iters)
+        t_trim = _time_compressor("trimmed_topk", x, k, iters)
+        t_bs = _time_compressor("threshold_bsearch", x, k, iters)
         t_comm = n * 4 / MURADIN.bandwidth          # Fig 3 "Comm." line
         rows.append({
             "size_mb": mb, "k": k,

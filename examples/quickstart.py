@@ -2,9 +2,11 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Single process, CPU-friendly. Shows the three optimizer modes side by
-side on the same model + data budget: dense baseline, RGC (0.1%-style
-sparse sync, here 1% for the tiny model), and quantized RGC.
+Single process, CPU-friendly. Shows the optimizer modes side by side on
+the same model + data budget: dense baseline, RGC (0.1%-style sparse
+sync, here 1% for the tiny model), quantized RGC, and a registry-named
+compressor ("threshold_bsearch" forces Alg 3 on every leaf — any name
+from repro.core.registry works, e.g. "quantized(trimmed_topk)").
 """
 import jax.numpy as jnp
 
@@ -17,7 +19,7 @@ def main() -> None:
     cfg = get_config("internlm2-1.8b", smoke=True)
     print(f"model: {cfg.name} (reduced: {cfg.num_layers}L d={cfg.d_model})")
 
-    for optimizer in ("dense", "rgc", "rgc_quant"):
+    for optimizer in ("dense", "rgc", "rgc_quant", "threshold_bsearch"):
         tc = TrainConfig(lr=0.3, momentum=0.0, optimizer=optimizer,
                          density=0.01, local_clip=1.0)
         trainer = Trainer(cfg, tc)

@@ -45,6 +45,12 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--density", type=float, default=0.001)
+    ap.add_argument("--optimizer", default="rgc",
+                    help="rgc | rgc_quant | dense | any registered "
+                    "compressor spec (repro.core.registry)")
+    ap.add_argument("--transport", default="fused_allgather",
+                    choices=["fused_allgather", "per_leaf_allgather",
+                             "dense_psum"])
     ap.add_argument("--full-size", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     args = ap.parse_args()
@@ -52,7 +58,8 @@ def main() -> None:
     cfg = build_config(args.full_size)
     n_dev = len(jax.devices())
     mesh = make_host_mesh(max(n_dev // 2, 1), 2) if n_dev >= 2 else None
-    tc = TrainConfig(lr=0.1, momentum=0.9, optimizer="rgc",
+    tc = TrainConfig(lr=0.1, momentum=0.9, optimizer=args.optimizer,
+                     transport=args.transport,
                      density=args.density, warmup_steps_per_stage=20,
                      dense_warmup=True, local_clip=1.0)
     trainer = Trainer(cfg, tc, mesh=mesh, ckpt_dir=args.ckpt_dir)

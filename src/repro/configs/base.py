@@ -120,7 +120,15 @@ class TrainConfig:
     momentum: float = 0.9
     nesterov: bool = False
     weight_decay: float = 0.0
-    optimizer: str = "rgc"          # rgc | rgc_quant | dense | dense_fsdp
+    # rgc | rgc_quant | dense | any registered compressor spec
+    # (repro.core.registry), e.g. "threshold_bsearch" or
+    # "quantized(trimmed_topk)" — fixed per-leaf dispatch through it.
+    # ("dense_fsdp" is handled only by launch/dryrun's
+    # make_fsdp_dense_step branch, not by the GradientSync builder.)
+    optimizer: str = "rgc"
+    # sparse collective backend: fused_allgather | per_leaf_allgather |
+    # dense_psum (dense-only baseline)
+    transport: str = "fused_allgather"
     density: float = 0.001
     warmup_steps_per_stage: int = 0
     dense_warmup: bool = False

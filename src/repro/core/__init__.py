@@ -1,16 +1,43 @@
-"""RedSync core: residual gradient compression, sparse sync, cost model."""
+"""RedSync core: composable residual gradient compression.
+
+Layering:
+  * ``registry``      — string-addressable component registry
+  * ``api``           — ``Compressor`` / ``Transport`` / ``DispatchPolicy``
+                        protocols
+  * ``compressors``   — dense / exact_topk / trimmed_topk /
+                        threshold_bsearch / quantized(inner)
+  * ``transport``     — fused_allgather / per_leaf_allgather / dense_psum
+  * ``dispatch``      — size_based (§5.5, real dtype bytes) / fixed
+  * ``gradient_sync`` — the composed optax-style transform
+  * ``rgc``           — legacy ``rgc_init``/``rgc_apply`` shims
+"""
+from . import registry
+from .api import Compressor, DispatchPolicy, Transport
+from .compressors import Dense, ExactTopK, Quantized, ThresholdBSearch, \
+    TrimmedTopK
 from .cost_model import (NetworkModel, PRESETS, choose_method, speedup,
                          t_dense, t_sparse)
-from .rgc import RGCConfig, rgc_apply, rgc_init
+from .dispatch import FixedPolicy, SizeBasedPolicy, leaf_nbytes
+from .gradient_sync import GradientSync, build_gradient_sync
+from .rgc import RGCConfig, gradient_sync_from_rgc_config, rgc_apply, rgc_init
 from .schedule import DensitySchedule
 from .selection import (Selected, exact_topk, exact_topk_quant,
                         threshold_binary_search, threshold_binary_search_quant,
                         threshold_filter, trimmed_topk, trimmed_topk_quant)
+from .transport import DensePsum, FusedAllgather, PerLeafAllgather
 
 __all__ = [
+    "registry",
+    "Compressor", "DispatchPolicy", "Transport",
+    "Dense", "ExactTopK", "Quantized", "ThresholdBSearch", "TrimmedTopK",
     "NetworkModel", "PRESETS", "choose_method", "speedup", "t_dense",
-    "t_sparse", "RGCConfig", "rgc_apply", "rgc_init", "DensitySchedule",
+    "t_sparse",
+    "FixedPolicy", "SizeBasedPolicy", "leaf_nbytes",
+    "GradientSync", "build_gradient_sync",
+    "RGCConfig", "gradient_sync_from_rgc_config", "rgc_apply", "rgc_init",
+    "DensitySchedule",
     "Selected", "exact_topk", "exact_topk_quant", "threshold_binary_search",
     "threshold_binary_search_quant", "threshold_filter", "trimmed_topk",
     "trimmed_topk_quant",
+    "DensePsum", "FusedAllgather", "PerLeafAllgather",
 ]

@@ -1,0 +1,102 @@
+"""Composable gradient-compression API (RedSync decomposed).
+
+The paper's pipeline — residual accumulation → communication-set selection
+→ packing → sparse allgather → decompression → apply — is decomposed into
+three swappable protocols, each string-addressable via
+``repro.core.registry``:
+
+``Compressor``
+    Per-leaf selection/decompression policy. ``compress`` maps a flat f32
+    residual vector to a fixed-capacity ``Selected`` set (plus updated
+    ``LeafState`` — threshold cache, quantization phase); ``decompress``
+    turns gathered wire messages back into a dense f32 update sum.
+    Implementations: ``dense``, ``exact_topk``, ``trimmed_topk`` (Alg 2),
+    ``threshold_bsearch`` (Alg 3), and the ``quantized(inner)`` wrapper
+    (§5.2.3).
+
+``Transport``
+    Wire packing + collectives over ``sync_axes``. Implementations:
+    ``fused_allgather`` (§5.3 tensor fusion: one collective for all
+    leaves), ``per_leaf_allgather``, and ``dense_psum`` (dense baseline —
+    sparse messages are a configuration error).
+
+``DispatchPolicy``
+    Chooses a compressor *name* per leaf. ``size_based`` is the paper's
+    §5.5 byte-size dispatch (using real ``dtype.itemsize`` bytes);
+    ``fixed`` routes every leaf through one named compressor.
+
+``GradientSync`` (repro.core.gradient_sync) composes the three into an
+optax-style ``init(params)`` / ``update(grads, state, params, lr)``
+transform; ``rgc_apply`` is now a thin shim over it.
+
+These are structural ``Protocol``s: implementations register with the
+registry and need not inherit anything.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+from .residual import LeafState
+from .selection import Selected
+
+
+@runtime_checkable
+class Compressor(Protocol):
+    """Per-leaf compression: residual vector -> sparse communication set."""
+
+    name: str
+    quantized: bool      # wire payload is (count, indices, mean) if True
+
+    def capacity(self, k: int) -> int:
+        """Fixed message capacity (trace-time shape) for a target of k."""
+        ...
+
+    def init_leaf(self, param: jax.Array, *, momentum: bool,
+                  residual_dtype: Any) -> LeafState:
+        """Per-leaf residual/momentum/threshold state."""
+        ...
+
+    def compress(self, flat_v: jax.Array, k: int,
+                 state: LeafState) -> tuple[Selected, LeafState]:
+        """Select the communication set from the flat f32 residual."""
+        ...
+
+    def decompress(self, gathered: jax.Array, size: int,
+                   k: int) -> jax.Array:
+        """[workers, msg_len] wire messages -> dense f32[size] update SUM."""
+        ...
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """Wire packing + collectives over the data-parallel mesh axes."""
+
+    name: str
+    sync_axes: tuple[str, ...]
+
+    def num_workers(self) -> int:
+        """Product of ``sync_axes`` sizes (1 outside any mesh)."""
+        ...
+
+    def pack(self, sel: Selected, quantized: bool) -> jax.Array:
+        """Selected -> packed f32 wire message."""
+        ...
+
+    def allgather(self, messages: list[jax.Array]) -> list[jax.Array]:
+        """Exchange packed messages; returns per-leaf [workers, len]."""
+        ...
+
+    def allreduce_mean(self, grad: jax.Array) -> jax.Array:
+        """Dense fallback for small leaves (psum / pmean)."""
+        ...
+
+
+@runtime_checkable
+class DispatchPolicy(Protocol):
+    """Per-leaf compressor choice (the §5.5 method dispatch, pluggable)."""
+
+    def compressor_for(self, path: str, leaf: jax.Array) -> str:
+        """Registered compressor name for this leaf ("dense" = allreduce)."""
+        ...

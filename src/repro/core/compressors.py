@@ -1,0 +1,219 @@
+"""Compressor implementations (RedSync §5.2), registry-addressable.
+
+Each compressor owns one leaf's selection semantics and its share of the
+wire protocol (capacity + decompression); packing and collectives live in
+``transport``. All implementations are stateless Python objects — JAX
+state (threshold cache, quantization phase, bsearch refresh interval)
+rides in the per-leaf ``LeafState``.
+
+Registered names: ``dense``, ``exact_topk``, ``trimmed_topk``,
+``threshold_bsearch`` (alias ``threshold_binary_search``), and the
+``quantized(<inner>)`` wrapper. Factories accept the shared parameter bag
+(``backend``, ``bsearch_interval``, ...) and ignore what they don't use,
+so ``registry.make(COMPRESSOR, name, **params)`` works uniformly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import registry
+from . import selection as sel_lib
+from . import sync as sync_lib
+from .residual import LeafState, init_leaf
+from .selection import Selected
+
+
+class _Base:
+    """Shared init/decompress; subclasses define capacity + compress."""
+
+    name = "?"
+    quantized = False
+
+    def init_leaf(self, param: jax.Array, *, momentum: bool,
+                  residual_dtype: Any = jnp.float32) -> LeafState:
+        return init_leaf(param, momentum=momentum,
+                         residual_dtype=residual_dtype)
+
+    def decompress(self, gathered: jax.Array, size: int, k: int) -> jax.Array:
+        return sync_lib.unpack_decompress(
+            gathered, size, self.capacity(k), self.quantized)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<compressor {self.name}>"
+
+
+class Dense(_Base):
+    """Sentinel: leaf takes the dense allreduce path (no sparse message).
+
+    ``GradientSync`` routes "dense" leaves through
+    ``Transport.allreduce_mean`` + plain momentum SGD; compress/decompress
+    are never called.
+    """
+
+    name = "dense"
+
+    def capacity(self, k: int) -> int:
+        return 0
+
+    def compress(self, flat_v, k, state):
+        raise NotImplementedError(
+            "dense leaves are synchronized via Transport.allreduce_mean")
+
+
+class ExactTopK(_Base):
+    """The radixSelect baseline: exact |x| top-k (capacity == k)."""
+
+    name = "exact_topk"
+
+    def capacity(self, k: int) -> int:
+        return k
+
+    def compress(self, flat_v: jax.Array, k: int,
+                 state: LeafState) -> tuple[Selected, LeafState]:
+        return sel_lib.exact_topk(flat_v, k), state
+
+    def quant_select(self, flat_v: jax.Array, k: int,
+                     phase: jax.Array) -> Selected:
+        return sel_lib.exact_topk_quant(flat_v, k, phase)
+
+
+class TrimmedTopK(_Base):
+    """Alg 2: statistics-guided trimming, then top-k over survivors."""
+
+    name = "trimmed_topk"
+
+    def __init__(self, backend: str = "jnp", eps: float = 0.2):
+        self.backend = backend
+        self.eps = eps
+
+    def capacity(self, k: int) -> int:
+        return k
+
+    def compress(self, flat_v: jax.Array, k: int,
+                 state: LeafState) -> tuple[Selected, LeafState]:
+        if self.backend == "pallas":
+            from repro.kernels import ops as kops
+            return kops.trimmed_topk(flat_v, k), state
+        return sel_lib.trimmed_topk(flat_v, k, self.eps), state
+
+    def quant_select(self, flat_v: jax.Array, k: int,
+                     phase: jax.Array) -> Selected:
+        return sel_lib.trimmed_topk_quant(flat_v, k, phase, self.eps)
+
+
+class ThresholdBSearch(_Base):
+    """Alg 3: sampled threshold binary search with threshold reuse.
+
+    capacity == 2k (padded; true length in the ``count`` header). The
+    binary search refreshes every ``interval`` iterations and reuses the
+    cached ``LeafState.threshold`` in between (§5.2.2 "sampled" variant).
+    """
+
+    name = "threshold_bsearch"
+
+    def __init__(self, backend: str = "jnp", interval: int = 5,
+                 eps: float = 1e-3):
+        self.backend = backend
+        self.interval = interval
+        self.eps = eps
+
+    def capacity(self, k: int) -> int:
+        return 2 * k
+
+    def compress(self, flat_v: jax.Array, k: int,
+                 state: LeafState) -> tuple[Selected, LeafState]:
+        if self.backend == "pallas":
+            from repro.kernels import ops as kops
+            selected, thr = kops.threshold_binary_search(flat_v, k)
+            return selected, state._replace(threshold=thr)
+
+        def refresh(_):
+            s, thr = sel_lib.threshold_binary_search(flat_v, k, self.eps)
+            return s, thr
+
+        def reuse(_):
+            s = sel_lib.threshold_filter(flat_v, state.threshold,
+                                         capacity=2 * k)
+            return s, state.threshold
+
+        do_refresh = (state.interval % self.interval) == 0
+        s, thr = jax.lax.cond(do_refresh, refresh, reuse, operand=None)
+        return s, state._replace(threshold=thr,
+                                 interval=state.interval + 1)
+
+    def quant_select(self, flat_v: jax.Array, k: int,
+                     phase: jax.Array) -> Selected:
+        # threshold sharing is incompatible with the alternating sign
+        # phase (§5.2.3), so the quantized variant always re-searches.
+        return sel_lib.threshold_binary_search_quant(flat_v, k, phase,
+                                                     self.eps)
+
+
+class Quantized(_Base):
+    """§5.2.3 wrapper: same-signed selection + single-scalar-mean payload.
+
+    Alternates top-k (positives) and bottom-k (negatives) via
+    ``LeafState.phase``; the wire message carries (count, indices, mean)
+    — ``sync.pack``/``unpack_decompress`` handle the payload swap via the
+    ``quantized`` flag.
+    """
+
+    quantized = True
+
+    def __init__(self, inner: _Base):
+        if getattr(inner, "quantized", False):
+            raise ValueError("cannot quantize an already-quantized "
+                             f"compressor {inner.name!r}")
+        if not hasattr(inner, "quant_select"):
+            raise ValueError(
+                f"compressor {inner.name!r} has no quantized variant")
+        self.inner = inner
+        self.name = f"quantized({inner.name})"
+
+    def capacity(self, k: int) -> int:
+        return self.inner.capacity(k)
+
+    def compress(self, flat_v: jax.Array, k: int,
+                 state: LeafState) -> tuple[Selected, LeafState]:
+        sel = self.inner.quant_select(flat_v, k, state.phase)
+        return sel, state._replace(phase=(state.phase + 1) % 2)
+
+
+# --- registration ----------------------------------------------------------
+
+@registry.register(registry.COMPRESSOR, "dense")
+def _dense(**_: Any) -> Dense:
+    return Dense()
+
+
+@registry.register(registry.COMPRESSOR, "exact_topk")
+def _exact(**_: Any) -> ExactTopK:
+    return ExactTopK()
+
+
+@registry.register(registry.COMPRESSOR, "trimmed_topk")
+def _trimmed(backend: str = "jnp", trim_eps: float = 0.2,
+             **_: Any) -> TrimmedTopK:
+    return TrimmedTopK(backend=backend, eps=trim_eps)
+
+
+@registry.register(registry.COMPRESSOR, "threshold_bsearch")
+def _bsearch(backend: str = "jnp", bsearch_interval: int = 5,
+             bsearch_eps: float = 1e-3, **_: Any) -> ThresholdBSearch:
+    return ThresholdBSearch(backend=backend, interval=bsearch_interval,
+                            eps=bsearch_eps)
+
+
+registry.register_alias(registry.COMPRESSOR, "threshold_binary_search",
+                        "threshold_bsearch")
+
+
+@registry.register(registry.COMPRESSOR, "quantized")
+def _quantized(inner: _Base | None = None, **params: Any) -> Quantized:
+    # bare "quantized" defaults to the exact-top-k inner selector
+    return Quantized(inner if inner is not None
+                     else registry.make(registry.COMPRESSOR, "exact_topk",
+                                        **params))

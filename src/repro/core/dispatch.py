@@ -1,0 +1,67 @@
+"""Per-leaf method dispatch (§5.5), as pluggable ``DispatchPolicy``s.
+
+``size_based`` is the paper's rule — < 128 KB dense allreduce; 128 KB –
+4 MB trimmed top-k; > 4 MB sampled threshold binary search — driven by
+the leaf's REAL byte size (``size * dtype.itemsize``). The seed's
+``leaf_bytes`` assumed 4 bytes/element, which mis-dispatched bf16 models
+across both boundaries (a 96 K-element bf16 leaf is 187.5 KB, not 375 KB).
+Wire messages are still f32 regardless of the gradient dtype
+(``sync.py``); the dispatch question is about the *parameter's* traffic
+volume, which follows its storage size.
+
+``fixed`` routes every leaf through one named compressor — what
+``TrainConfig.optimizer = "<registered name>"`` builds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+
+from . import registry
+from .cost_model import DENSE_THRESHOLD_BYTES, TRIMMED_THRESHOLD_BYTES
+
+
+def leaf_nbytes(x: jax.Array) -> int:
+    """Real storage bytes of a leaf (works on ShapeDtypeStruct too)."""
+    import numpy as np
+    return int(x.size) * np.dtype(x.dtype).itemsize
+
+
+@dataclass(frozen=True)
+class SizeBasedPolicy:
+    """RedSync §5.5: choose the selector by leaf byte size."""
+
+    dense_threshold_bytes: int = DENSE_THRESHOLD_BYTES
+    trimmed_threshold_bytes: int = TRIMMED_THRESHOLD_BYTES
+
+    def compressor_for(self, path: str, leaf: jax.Array) -> str:
+        nb = leaf_nbytes(leaf)
+        if nb < self.dense_threshold_bytes:
+            return "dense"
+        if nb < self.trimmed_threshold_bytes:
+            return "trimmed_topk"
+        return "threshold_bsearch"
+
+
+@dataclass(frozen=True)
+class FixedPolicy:
+    """Every leaf uses one registered compressor (benchmark / ablation)."""
+
+    compressor: str = "threshold_bsearch"
+
+    def compressor_for(self, path: str, leaf: jax.Array) -> str:
+        return self.compressor
+
+
+@registry.register(registry.DISPATCH_POLICY, "size_based")
+def _size_based(dense_threshold_bytes: int = DENSE_THRESHOLD_BYTES,
+                trimmed_threshold_bytes: int = TRIMMED_THRESHOLD_BYTES,
+                **_: Any) -> SizeBasedPolicy:
+    return SizeBasedPolicy(dense_threshold_bytes, trimmed_threshold_bytes)
+
+
+@registry.register(registry.DISPATCH_POLICY, "fixed")
+def _fixed(compressor: str = "threshold_bsearch", **_: Any) -> FixedPolicy:
+    return FixedPolicy(compressor)

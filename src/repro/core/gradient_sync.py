@@ -1,0 +1,247 @@
+"""``GradientSync``: the composed RedSync pipeline (Algorithms 4 + 5).
+
+Optax-style transform built from three registry-addressable pieces:
+
+    sync = build_gradient_sync(optimizer="rgc", sync_axes=("data",), ...)
+    state = sync.init(params)
+    new_params, new_state = sync.update(grads, state, params, lr)
+
+``update`` runs the paper's six stages per step — DGC local clipping →
+residual/momentum accumulation → per-leaf selection (``Compressor``) →
+packing + sparse allgather (``Transport``) → scatter-add decompression →
+SGD apply — with the per-leaf method choice owned by a ``DispatchPolicy``.
+``density >= 1.0`` is the §5.7 dense-warm-up sentinel: every leaf takes
+the dense allreduce path regardless of policy.
+
+Like the legacy ``rgc_apply`` it replaces (now a shim over this), it must
+run inside a fully-manual shard_map region whose axis names include the
+transport's ``sync_axes``; every leaf is a raw local shard and gradients
+are local (un-averaged).
+
+``optimizer`` accepts ``"rgc"`` (§5.5 size-based dispatch), ``"rgc_quant"``
+(same + §5.2.3 quantization), ``"dense"``, or ANY registered compressor
+spec — e.g. ``"threshold_bsearch"`` or ``"quantized(trimmed_topk)"`` —
+which routes every leaf through that compressor.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import registry
+from .api import Compressor, DispatchPolicy, Transport
+from .compressors import _Base as _CompressorBase  # noqa: F401 (registration)
+from .dispatch import FixedPolicy, SizeBasedPolicy
+from .residual import LeafState, accumulate, local_clip_scale, \
+    mask_communicated
+from .transport import FusedAllgather  # noqa: F401 (registration)
+
+
+@dataclass
+class GradientSync:
+    """Composed residual-gradient-compression transform."""
+
+    policy: DispatchPolicy
+    transport: Transport
+    density: float = 0.001
+    momentum: float = 0.9
+    nesterov: bool = False
+    weight_decay: float = 0.0
+    local_clip: float | None = None
+    quantize: bool = False
+    no_quant_paths: tuple[str, ...] = ("lm_head", "embed")
+    residual_dtype: Any = jnp.float32
+    # parameter bag threaded to compressor factories (backend,
+    # bsearch_interval, trim_eps, ...)
+    compressor_params: dict = field(default_factory=dict)
+    _compressors: dict = field(default_factory=dict, repr=False)
+
+    # -- construction helpers ----------------------------------------------
+
+    def compressor(self, name: str) -> Compressor:
+        """Resolve (and cache) a compressor instance by registered name."""
+        if name not in self._compressors:
+            self._compressors[name] = registry.make(
+                registry.COMPRESSOR, name, **self.compressor_params)
+        return self._compressors[name]
+
+    def _leaf_compressor(self, name: str, path: str) -> Compressor:
+        """Apply the §5.2.3 quantization wrap where configured.
+
+        The output/embedding layers are never quantized ("we do not
+        quantify the output layer").
+        """
+        if (self.quantize and name != "dense"
+                and not name.startswith("quantized")
+                and not any(t in path for t in self.no_quant_paths)):
+            return self.compressor(f"quantized({name})")
+        return self.compressor(name)
+
+    # -- the transform ------------------------------------------------------
+
+    def init(self, params: Any) -> Any:
+        """State tree congruent with params (LeafState at each leaf).
+
+        Each leaf's state comes from the compressor the policy assigns it
+        (all built-ins share ``residual.init_leaf``; custom compressors
+        may carry extra state).
+        """
+        leaves, treedef = jax.tree.flatten(params)
+        paths = [jax.tree_util.keystr(kp) for kp, _ in
+                 jax.tree_util.tree_flatten_with_path(params)[0]]
+        out = []
+        for path, p in zip(paths, leaves):
+            name = self.policy.compressor_for(path, p)
+            comp = self._leaf_compressor(name, path)
+            out.append(comp.init_leaf(p, momentum=bool(self.momentum),
+                                      residual_dtype=self.residual_dtype))
+        return jax.tree.unflatten(treedef, out)
+
+    def update(self, grads: Any, state: Any, params: Any, lr: jax.Array,
+               *, density: float | None = None) -> tuple[Any, Any]:
+        """One synchronized step. Returns (new_params, new_state)."""
+        density = self.density if density is None else density
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_p = treedef.flatten_up_to(params)
+        leaves_s = treedef.flatten_up_to(state)
+        paths = [jax.tree_util.keystr(kp)
+                 for kp, _ in jax.tree_util.tree_flatten_with_path(grads)[0]]
+        n_workers = self.transport.num_workers()
+
+        # --- optional DGC local clipping (pre-accumulation, N^{-1/2}) ------
+        if self.local_clip is not None:
+            sq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves_g)
+            scale = local_clip_scale(sq, self.local_clip, n_workers)
+            leaves_g = [g * scale for g in leaves_g]
+
+        # density == 1.0 sentinel: RedSync dense warm-up (§5.7)
+        all_dense = density >= 1.0
+
+        plan: list[tuple[int, Compressor | None, int]] = []  # (i, comp, k)
+        for i, g in enumerate(leaves_g):
+            name = ("dense" if all_dense
+                    else self.policy.compressor_for(paths[i], g))
+            if name == "dense":
+                plan.append((i, None, 0))
+                continue
+            k = max(1, int(math.ceil(density * g.size)))
+            plan.append((i, self._leaf_compressor(name, paths[i]), k))
+
+        # --- pass 1: residual update + selection + message packing ---------
+        messages: list[jax.Array] = []
+        msg_meta: list[tuple[int, Compressor, int]] = []  # (leaf, comp, k)
+        new_states: list[LeafState] = list(leaves_s)
+        for i, comp, k in plan:
+            if comp is None:
+                continue
+            st = accumulate(
+                leaves_g[i], leaves_p[i], leaves_s[i],
+                momentum=self.momentum, nesterov=self.nesterov,
+                weight_decay=self.weight_decay,
+            )
+            flat_v = st.residual.reshape(-1).astype(jnp.float32)
+            selected, st = comp.compress(flat_v, k, st)
+            st = mask_communicated(st, selected.indices,
+                                   momentum=bool(self.momentum))
+            new_states[i] = st
+            messages.append(self.transport.pack(selected, comp.quantized))
+            msg_meta.append((i, comp, k))
+
+        # --- pass 2: synchronization ---------------------------------------
+        gathered = self.transport.allgather(messages)
+
+        # --- pass 3: decompress + apply ------------------------------------
+        new_params: list[jax.Array] = list(leaves_p)
+        for buf, (i, comp, k) in zip(gathered, msg_meta):
+            g_sum = comp.decompress(buf, leaves_p[i].size, k)
+            upd = (g_sum / n_workers).reshape(leaves_p[i].shape)
+            new_params[i] = (leaves_p[i].astype(jnp.float32)
+                             - lr * upd).astype(leaves_p[i].dtype)
+
+        for i, comp, _k in plan:
+            if comp is not None:
+                continue
+            g_mean = self.transport.allreduce_mean(leaves_g[i])
+            st = leaves_s[i]
+            if self.weight_decay:
+                g_mean = g_mean + self.weight_decay * \
+                    leaves_p[i].astype(jnp.float32)
+            if self.momentum:
+                u = self.momentum * st.momentum + g_mean
+                upd = (g_mean + self.momentum * u) if self.nesterov else u
+                new_states[i] = st._replace(momentum=u)
+            else:
+                upd = g_mean
+            new_params[i] = (leaves_p[i].astype(jnp.float32)
+                             - lr * upd).astype(leaves_p[i].dtype)
+
+        return (jax.tree.unflatten(treedef, new_params),
+                jax.tree.unflatten(treedef, new_states))
+
+
+def build_gradient_sync(
+    optimizer: str = "rgc",
+    *,
+    transport: str = "fused_allgather",
+    sync_axes: tuple[str, ...] = (),
+    density: float = 0.001,
+    momentum: float = 0.9,
+    nesterov: bool = False,
+    weight_decay: float = 0.0,
+    local_clip: float | None = None,
+    residual_dtype: Any = jnp.float32,
+    no_quant_paths: tuple[str, ...] = ("lm_head", "embed"),
+    dense_threshold_bytes: int | None = None,
+    trimmed_threshold_bytes: int | None = None,
+    **compressor_params: Any,
+) -> GradientSync:
+    """Build a ``GradientSync`` from string-addressable component names.
+
+    ``optimizer`` resolution:
+      * ``"rgc"`` / ``"rgc_quant"`` — the paper's size-based dispatch
+        (quantized variant wraps each non-dense compressor per §5.2.3);
+      * ``"dense"`` — every leaf dense allreduce (baseline);
+      * any registered compressor spec — fixed dispatch through it.
+    """
+    policy_kw = {}
+    if dense_threshold_bytes is not None:
+        policy_kw["dense_threshold_bytes"] = dense_threshold_bytes
+    if trimmed_threshold_bytes is not None:
+        policy_kw["trimmed_threshold_bytes"] = trimmed_threshold_bytes
+
+    quantize = False
+    if optimizer in ("rgc", "rgc_quant"):
+        policy: DispatchPolicy = registry.make(
+            registry.DISPATCH_POLICY, "size_based", **policy_kw)
+        quantize = optimizer == "rgc_quant"
+    elif optimizer == "dense":
+        policy = FixedPolicy("dense")
+    elif registry.contains(registry.COMPRESSOR, optimizer):
+        # fail at build time, not at the first jitted step, for specs that
+        # parse but cannot be constructed (e.g. "quantized(dense)")
+        registry.make(registry.COMPRESSOR, optimizer, **compressor_params)
+        policy = FixedPolicy(optimizer)
+    else:
+        raise ValueError(
+            f"unknown optimizer {optimizer!r}: expected rgc | rgc_quant | "
+            f"dense | a registered compressor "
+            f"{registry.names(registry.COMPRESSOR)}")
+
+    return GradientSync(
+        policy=policy,
+        transport=registry.make(registry.TRANSPORT, transport,
+                                sync_axes=tuple(sync_axes)),
+        density=density,
+        momentum=momentum,
+        nesterov=nesterov,
+        weight_decay=weight_decay,
+        local_clip=local_clip,
+        quantize=quantize,
+        no_quant_paths=tuple(no_quant_paths),
+        residual_dtype=residual_dtype,
+        compressor_params=dict(compressor_params),
+    )

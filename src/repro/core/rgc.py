@@ -1,37 +1,45 @@
-"""RGC as a composable gradient-synchronization transform (the paper's core).
+"""Legacy RGC entry points — thin shims over the composable API.
 
-``rgc_init`` / ``rgc_apply`` implement Algorithm 4 + Algorithm 5 end to end:
+The monolithic Algorithm 4 + 5 implementation that used to live here has
+been decomposed into ``Compressor`` / ``Transport`` / ``GradientSync``
+(see ``repro.core.api``); ``rgc_init`` / ``rgc_apply`` are kept for one
+release as shims so existing callers keep working:
 
-    per leaf (statically, by local shard size — §5.5 dispatch):
-      < 128 KB            -> dense allreduce + ordinary momentum SGD
-      128 KB – 4 MB       -> trimmed top-k selection           (Alg 2)
-      > 4 MB              -> sampled threshold binary search   (Alg 3, reuse
-                             the threshold for `bsearch_interval` iterations)
-    quantized mode swaps in the same-signed top/bottom variants (§5.2.3) and
-    transmits (count, indices, mean).
+    cfg = RGCConfig(density=0.001, sync_axes=("data",))
+    state = rgc_init(params, cfg)                  # == sync.init(params)
+    new_p, new_s = rgc_apply(grads, params, state, lr=lr, cfg=cfg)
 
-``rgc_apply`` must run in a *fully manual* shard_map region: every leaf is a
-raw local shard, gradients are local (un-averaged), and the only collectives
-are the sparse allgathers over ``cfg.sync_axes`` plus dense psum for small
-leaves. With tensor parallelism each model-shard replica group compresses its
-own shard (M -> M / tp in Eq 1), see DESIGN.md §4.
+New code should build a ``GradientSync`` directly:
 
-The transform owns momentum (momentum correction); the weight update applied
-afterwards is plain SGD: ``w -= lr * sync_update`` (Alg 4 line 48–50).
+    from repro.core import build_gradient_sync
+    sync = build_gradient_sync("rgc", sync_axes=("data",), density=0.001)
+    state = sync.init(params)
+    new_p, new_s = sync.update(grads, state, params, lr)
+
+Semantics are bitwise-identical (tests/test_api.py proves it against a
+frozen copy of the monolith) with one intentional fix: per-leaf §5.5
+dispatch now uses real ``dtype.itemsize`` bytes instead of assuming
+4 bytes/element, so bf16 models dispatch correctly across the
+128 KB / 4 MB boundaries.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
-from typing import Any, Callable
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from . import selection as sel_lib
-from . import sync as sync_lib
-from .cost_model import DENSE_THRESHOLD_BYTES, TRIMMED_THRESHOLD_BYTES, choose_method
-from .residual import LeafState, accumulate, init_leaf, local_clip_scale, mask_communicated
+from .cost_model import DENSE_THRESHOLD_BYTES, TRIMMED_THRESHOLD_BYTES
+from .dispatch import SizeBasedPolicy, leaf_nbytes
+from .gradient_sync import GradientSync, build_gradient_sync
+
+# canonical registry name -> the method string the legacy API exposed
+_LEGACY_METHOD = {
+    "dense": "dense",
+    "trimmed_topk": "trimmed_topk",
+    "threshold_bsearch": "threshold_binary_search",
+}
 
 
 @dataclass(frozen=True)
@@ -57,56 +65,42 @@ class RGCConfig:
     no_quant_paths: tuple[str, ...] = ("lm_head", "embed")
 
 
+def gradient_sync_from_rgc_config(cfg: RGCConfig) -> GradientSync:
+    """The ``GradientSync`` equivalent of a legacy ``RGCConfig``."""
+    return build_gradient_sync(
+        "rgc_quant" if cfg.quantize else "rgc",
+        transport=("fused_allgather" if cfg.fuse_messages
+                   else "per_leaf_allgather"),
+        sync_axes=cfg.sync_axes,
+        density=cfg.density,
+        momentum=cfg.momentum,
+        nesterov=cfg.nesterov,
+        weight_decay=cfg.weight_decay,
+        local_clip=cfg.local_clip,
+        residual_dtype=cfg.residual_dtype,
+        no_quant_paths=cfg.no_quant_paths,
+        dense_threshold_bytes=cfg.dense_threshold_bytes,
+        trimmed_threshold_bytes=cfg.trimmed_threshold_bytes,
+        backend=cfg.backend,
+        bsearch_interval=cfg.bsearch_interval,
+    )
+
+
 def leaf_bytes(x: jax.Array) -> int:
-    return x.size * 4  # residuals/messages are f32 on the wire
+    """Deprecated: real storage bytes of a leaf (use ``dispatch.leaf_nbytes``)."""
+    return leaf_nbytes(x)
 
 
 def leaf_method(x: jax.Array, cfg: RGCConfig) -> str:
-    return choose_method(
-        leaf_bytes(x), cfg.dense_threshold_bytes, cfg.trimmed_threshold_bytes
-    )
+    policy = SizeBasedPolicy(cfg.dense_threshold_bytes,
+                             cfg.trimmed_threshold_bytes)
+    return _LEGACY_METHOD[policy.compressor_for("", x)]
 
 
 def rgc_init(params: Any, cfg: RGCConfig | None = None) -> Any:
     """State tree congruent with params (LeafState at each leaf)."""
     cfg = cfg or RGCConfig()
-    return jax.tree.map(
-        lambda p: init_leaf(p, momentum=bool(cfg.momentum),
-                            residual_dtype=cfg.residual_dtype), params)
-
-
-def _select(flat_v: jax.Array, k: int, method: str, state: LeafState,
-            cfg: RGCConfig, quantize: bool):
-    """Run the statically chosen selector. Returns (Selected, new LeafState)."""
-    if cfg.backend == "pallas":
-        from repro.kernels import ops as kops
-        if method == "trimmed_topk" and not quantize:
-            return kops.trimmed_topk(flat_v, k), state
-        if method == "threshold_binary_search" and not quantize:
-            selected, thr = kops.threshold_binary_search(flat_v, k)
-            return selected, state._replace(threshold=thr)
-    if quantize:
-        if method == "trimmed_topk":
-            s = sel_lib.trimmed_topk_quant(flat_v, k, state.phase)
-        else:
-            s = sel_lib.threshold_binary_search_quant(flat_v, k, state.phase)
-        return s, state._replace(phase=(state.phase + 1) % 2)
-    if method == "trimmed_topk":
-        return sel_lib.trimmed_topk(flat_v, k), state
-    # sampled threshold binary search with threshold reuse (interval = 5)
-    def refresh(_):
-        s, thr = sel_lib.threshold_binary_search(flat_v, k)
-        return s, thr
-    def reuse(_):
-        s = sel_lib.threshold_filter(flat_v, state.threshold, capacity=2 * k)
-        return s, state.threshold
-    do_refresh = (state.interval % cfg.bsearch_interval) == 0
-    s, thr = jax.lax.cond(do_refresh, refresh, reuse, operand=None)
-    return s, state._replace(threshold=thr, interval=state.interval + 1)
-
-
-def _capacity(k: int, method: str) -> int:
-    return k if method == "trimmed_topk" else 2 * k
+    return gradient_sync_from_rgc_config(cfg).init(params)
 
 
 def rgc_apply(
@@ -123,87 +117,5 @@ def rgc_apply(
     Must be called inside a fully-manual shard_map region whose axis names
     include ``cfg.sync_axes``.
     """
-    density = cfg.density if density is None else density
-    leaves_g, treedef = jax.tree.flatten(grads)
-    leaves_p = treedef.flatten_up_to(params)
-    leaves_s = treedef.flatten_up_to(state)
-    paths = [jax.tree_util.keystr(kp)
-             for kp, _ in jax.tree_util.tree_flatten_with_path(grads)[0]]
-    n_workers = 1
-    for ax in cfg.sync_axes:
-        n_workers *= jax.lax.axis_size(ax)
-
-    # --- optional DGC local clipping (pre-accumulation, N^{-1/2}) ----------
-    if cfg.local_clip is not None:
-        sq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves_g)
-        scale = local_clip_scale(sq, cfg.local_clip, n_workers)
-        leaves_g = [g * scale for g in leaves_g]
-
-    # density == 1.0 sentinel: RedSync dense warm-up (§5.7) — everything dense
-    all_dense = density >= 1.0
-
-    plan = []  # (i, method, k, cap, quantize)
-    for i, (g, p) in enumerate(zip(leaves_g, leaves_p)):
-        method = "dense" if all_dense else leaf_method(g, cfg)
-        if method == "dense":
-            plan.append((i, "dense", 0, 0, False))
-            continue
-        k = max(1, int(math.ceil(density * g.size)))
-        quant = cfg.quantize and not any(t in paths[i] for t in cfg.no_quant_paths)
-        plan.append((i, method, k, _capacity(k, method), quant))
-
-    # --- pass 1: residual update + selection + message packing -------------
-    messages: list[jax.Array] = []
-    msg_meta: list[tuple[int, int, bool]] = []   # (leaf index, cap, quant)
-    new_states: list[LeafState] = list(leaves_s)
-    for i, method, k, cap, quant in plan:
-        if method == "dense":
-            continue
-        st = accumulate(
-            leaves_g[i], leaves_p[i], leaves_s[i],
-            momentum=cfg.momentum, nesterov=cfg.nesterov,
-            weight_decay=cfg.weight_decay,
-        )
-        flat_v = st.residual.reshape(-1).astype(jnp.float32)
-        selected, st = _select(flat_v, k, method, st, cfg, quant)
-        st = mask_communicated(st, selected.indices, momentum=bool(cfg.momentum))
-        new_states[i] = st
-        messages.append(sync_lib.pack(selected, quant))
-        msg_meta.append((i, cap, quant))
-
-    # --- pass 2: synchronization -------------------------------------------
-    if messages:
-        if cfg.fuse_messages:
-            gathered = sync_lib.fused_allgather(messages, cfg.sync_axes)
-        else:
-            gathered = [sync_lib.sparse_allgather(m, cfg.sync_axes)
-                        for m in messages]
-    else:
-        gathered = []
-
-    # --- pass 3: decompress + apply ----------------------------------------
-    new_params: list[jax.Array] = list(leaves_p)
-    for buf, (i, cap, quant) in zip(gathered, msg_meta):
-        g_sum = sync_lib.unpack_decompress(buf, leaves_p[i].size, cap, quant)
-        upd = (g_sum / n_workers).reshape(leaves_p[i].shape)
-        new_params[i] = (leaves_p[i].astype(jnp.float32)
-                         - lr * upd).astype(leaves_p[i].dtype)
-
-    for i, method, k, cap, quant in plan:
-        if method != "dense":
-            continue
-        g_mean = sync_lib.dense_allreduce_mean(leaves_g[i], cfg.sync_axes)
-        st = leaves_s[i]
-        if cfg.weight_decay:
-            g_mean = g_mean + cfg.weight_decay * leaves_p[i].astype(jnp.float32)
-        if cfg.momentum:
-            u = cfg.momentum * st.momentum + g_mean
-            upd = (g_mean + cfg.momentum * u) if cfg.nesterov else u
-            new_states[i] = st._replace(momentum=u)
-        else:
-            upd = g_mean
-        new_params[i] = (leaves_p[i].astype(jnp.float32)
-                         - lr * upd).astype(leaves_p[i].dtype)
-
-    return (jax.tree.unflatten(treedef, new_params),
-            jax.tree.unflatten(treedef, new_states))
+    sync = gradient_sync_from_rgc_config(cfg)
+    return sync.update(grads, state, params, lr, density=density)

@@ -1,0 +1,93 @@
+"""Transport backends: wire packing + collectives over ``sync_axes``.
+
+Three registered backends (§5.3/§5.4):
+
+* ``fused_allgather``   — tensor fusion: concatenate every leaf message
+                          into ONE buffer, a single allgather, then split
+                          (§5.3 "batch small allgather operations").
+* ``per_leaf_allgather`` — one collective per leaf (the unfused baseline;
+                          what fig10's per-message latency term models).
+* ``dense_psum``        — dense-only baseline; receiving a sparse message
+                          is a configuration error.
+
+All backends share the packed wire format of ``core.sync`` and the dense
+psum fallback for small leaves. Outside a mesh (``sync_axes=()``) every
+collective degrades to the single-worker identity, which is what the CPU
+smoke tests run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from . import registry
+from . import sync as sync_lib
+from .selection import Selected
+
+
+class _Base:
+    name = "?"
+
+    def __init__(self, sync_axes: tuple[str, ...] = ()):
+        self.sync_axes = tuple(sync_axes)
+
+    def num_workers(self) -> int:
+        from repro.jaxcompat import axis_size
+        n = 1
+        for ax in self.sync_axes:
+            n *= axis_size(ax)
+        return n
+
+    def pack(self, sel: Selected, quantized: bool) -> jax.Array:
+        return sync_lib.pack(sel, quantized)
+
+    def allreduce_mean(self, grad: jax.Array) -> jax.Array:
+        return sync_lib.dense_allreduce_mean(grad, self.sync_axes)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<transport {self.name} axes={self.sync_axes}>"
+
+
+class FusedAllgather(_Base):
+    name = "fused_allgather"
+
+    def allgather(self, messages: list[jax.Array]) -> list[jax.Array]:
+        if not messages:
+            return []
+        return sync_lib.fused_allgather(messages, self.sync_axes)
+
+
+class PerLeafAllgather(_Base):
+    name = "per_leaf_allgather"
+
+    def allgather(self, messages: list[jax.Array]) -> list[jax.Array]:
+        return [sync_lib.sparse_allgather(m, self.sync_axes)
+                for m in messages]
+
+
+class DensePsum(_Base):
+    name = "dense_psum"
+
+    def allgather(self, messages: list[jax.Array]) -> list[jax.Array]:
+        if messages:
+            raise NotImplementedError(
+                "dense_psum transport cannot carry sparse messages; use "
+                "fused_allgather/per_leaf_allgather or a dense-only "
+                "dispatch policy")
+        return []
+
+
+@registry.register(registry.TRANSPORT, "fused_allgather")
+def _fused(sync_axes: tuple[str, ...] = (), **_: Any) -> FusedAllgather:
+    return FusedAllgather(sync_axes)
+
+
+@registry.register(registry.TRANSPORT, "per_leaf_allgather")
+def _per_leaf(sync_axes: tuple[str, ...] = (), **_: Any) -> PerLeafAllgather:
+    return PerLeafAllgather(sync_axes)
+
+
+@registry.register(registry.TRANSPORT, "dense_psum")
+def _dense_psum(sync_axes: tuple[str, ...] = (), **_: Any) -> DensePsum:
+    return DensePsum(sync_axes)

@@ -1,0 +1,59 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The codebase targets the modern ``jax.shard_map`` API (keyword
+``axis_names`` for partial-manual regions, ``check_vma``). Older jax
+(< ~0.6, e.g. the 0.4.x CPU wheels in CI containers) only ships
+``jax.experimental.shard_map.shard_map`` with the complementary ``auto``
+set and ``check_rep``. This wrapper maps between the two so the trainer's
+nested partial-manual pattern runs on both.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+import jax
+
+
+def axis_size(name):
+    """``jax.lax.axis_size``; on older jax the psum-of-1 idiom (which jax
+    constant-folds to the bound axis size)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def shard_map(f, *, mesh=None, axis_names=None, in_specs, out_specs,
+              check_vma: bool = False, fallback_mesh=None):
+    """``jax.shard_map`` with old-jax fallback.
+
+    ``axis_names`` — the MANUAL axes (modern semantics); None = all mesh
+    axes. ``fallback_mesh`` is only consulted on the legacy path, which
+    requires an explicit mesh even where modern jax infers it from the
+    surrounding context (e.g. an inner shard_map nested in a manual
+    region).
+    """
+    if hasattr(jax, "shard_map"):
+        kw: dict[str, Any] = {}
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        sig = inspect.signature(jax.shard_map).parameters
+        if "check_vma" in sig:
+            kw["check_vma"] = check_vma
+        elif "check_rep" in sig:
+            kw["check_rep"] = check_vma
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             **kw)
+
+    from jax.experimental.shard_map import shard_map as _legacy
+    m = mesh if mesh is not None else fallback_mesh
+    if m is None:
+        raise ValueError(
+            "legacy jax.experimental.shard_map needs an explicit mesh: "
+            "pass mesh= or fallback_mesh=")
+    manual = (set(m.axis_names) if axis_names is None else set(axis_names))
+    auto = frozenset(set(m.axis_names) - manual)
+    return _legacy(f, mesh=m, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma, auto=auto)

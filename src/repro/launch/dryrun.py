@@ -355,7 +355,8 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--optimizer", default="rgc",
-                    choices=["rgc", "rgc_quant", "dense"])
+                    help="rgc | rgc_quant | dense | any registered "
+                    "compressor spec (repro.core.registry)")
     ap.add_argument("--density", type=float, default=0.001)
     ap.add_argument("--tag", default="")
     ap.add_argument("--out-dir", default="experiments/dryrun")

@@ -11,17 +11,25 @@ state (the dry-run needs to set XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+# jax < 0.4.38 has no explicit axis types; Auto is its only behavior, so
+# omitting axis_types there is equivalent
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _make_mesh(shape, axes):
+    if _AXIS_TYPE is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(_AXIS_TYPE.Auto,) * len(shape))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 4, model: int = 2):
     """Small mesh over forced host devices (tests / examples)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))

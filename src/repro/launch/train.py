@@ -40,7 +40,12 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.2)
     ap.add_argument("--optimizer", default="rgc",
-                    choices=["rgc", "rgc_quant", "dense"])
+                    help="rgc | rgc_quant | dense | any registered "
+                    "compressor spec, e.g. threshold_bsearch or "
+                    "'quantized(trimmed_topk)'")
+    ap.add_argument("--transport", default="fused_allgather",
+                    choices=["fused_allgather", "per_leaf_allgather",
+                             "dense_psum"])
     ap.add_argument("--density", type=float, default=0.01)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--warmup-steps-per-stage", type=int, default=0)
@@ -63,7 +68,8 @@ def main() -> None:
         mesh = make_host_mesh(d, m)
 
     tc = TrainConfig(lr=args.lr, momentum=args.momentum,
-                     optimizer=args.optimizer, density=args.density,
+                     optimizer=args.optimizer, transport=args.transport,
+                     density=args.density,
                      warmup_steps_per_stage=args.warmup_steps_per_stage)
     trainer = Trainer(cfg, tc, mesh=mesh, ckpt_dir=args.ckpt_dir)
     state = trainer.init_state()

@@ -8,7 +8,8 @@ Structure of one step on a mesh with batch axes B = ("pod","data") (or
       gradients are LOCAL (un-averaged) — exactly what RGC consumes.
       GSPMD still shards the model axis inside (with_sharding_constraint).
   inner shard_map — manual over "model" (fully manual now):
-      every leaf is a raw local shard; rgc_apply runs the paper's
+      every leaf is a raw local shard; ``GradientSync.update`` (built from
+      TrainConfig via the compressor/transport registry) runs the paper's
       Algorithm 4/5 per leaf: residual+momentum correction -> selection ->
       pack -> all_gather over B -> scatter-add decompress -> SGD apply.
       Small leaves take the dense psum fallback. With TP, each model-shard
@@ -32,7 +33,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
-from repro.core.rgc import RGCConfig, rgc_apply, rgc_init
+from repro.core.gradient_sync import GradientSync, build_gradient_sync
+from repro.jaxcompat import shard_map as shard_map_compat
+from repro.core.rgc import RGCConfig
 from repro.core.schedule import DensitySchedule
 from repro.models.common import param_specs
 from repro.models.registry import Model, get_model
@@ -51,7 +54,12 @@ def _batch_axes(mesh: Optional[Mesh]) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def _residual_dtype(tc: TrainConfig):
+    return jnp.bfloat16 if tc.residual_dtype == "bf16" else jnp.float32
+
+
 def make_rgc_config(tc: TrainConfig, mesh: Optional[Mesh]) -> RGCConfig:
+    """Legacy RGCConfig view of a TrainConfig (kept for dryrun callers)."""
     quant = tc.optimizer == "rgc_quant"
     return RGCConfig(
         density=tc.density,
@@ -61,8 +69,28 @@ def make_rgc_config(tc: TrainConfig, mesh: Optional[Mesh]) -> RGCConfig:
         quantize=quant,
         local_clip=tc.local_clip,
         sync_axes=_batch_axes(mesh),
-        residual_dtype=jnp.bfloat16 if tc.residual_dtype == "bf16"
-        else jnp.float32,
+        fuse_messages=tc.transport != "per_leaf_allgather",
+        residual_dtype=_residual_dtype(tc),
+    )
+
+
+def make_gradient_sync(tc: TrainConfig, mesh: Optional[Mesh]) -> GradientSync:
+    """Build the composed sync transform a TrainConfig describes.
+
+    ``tc.optimizer`` may be "rgc" / "rgc_quant" / "dense" or any
+    registered compressor spec (e.g. "threshold_bsearch",
+    "quantized(trimmed_topk)") — see repro.core.registry.
+    """
+    return build_gradient_sync(
+        tc.optimizer,
+        transport=tc.transport,
+        sync_axes=_batch_axes(mesh),
+        density=tc.density,
+        momentum=tc.momentum,
+        nesterov=tc.nesterov,
+        weight_decay=tc.weight_decay,
+        local_clip=tc.local_clip,
+        residual_dtype=_residual_dtype(tc),
     )
 
 
@@ -85,7 +113,7 @@ def make_train_step(
     (loss, new_params, new_rgc_state)."""
     cfg = model.cfg
     pc = pc or ParallelConfig()
-    rgc_cfg = make_rgc_config(tc, mesh)
+    sync = make_gradient_sync(tc, mesh)
     dens = tc.density if density is None else density
     if tc.optimizer == "dense":
         dens = 1.0
@@ -94,8 +122,8 @@ def make_train_step(
     if mesh is None:
         def step(params, rgc_state, batch, lr):
             loss, grads = jax.value_and_grad(model.loss)(params, batch)
-            new_params, new_state = rgc_apply(
-                grads, params, rgc_state, lr=lr, cfg=rgc_cfg, density=dens)
+            new_params, new_state = sync.update(
+                grads, rgc_state, params, lr, density=dens)
             return loss, new_params, new_state
         return jax.jit(step, donate_argnums=(0, 1) if donate else ())
 
@@ -107,17 +135,17 @@ def make_train_step(
     bspec = P(baxes)     # shard dim 0 over all batch axes
 
     def inner_sync(grads, params, rgc_state, lr):
-        return rgc_apply(grads, params, rgc_state, lr=lr, cfg=rgc_cfg,
-                         density=dens)
+        return sync.update(grads, rgc_state, params, lr, density=dens)
 
     def outer(params, rgc_state, batch, lr):
         loss, grads = jax.value_and_grad(model.loss)(params, batch)
-        new_params, new_state = jax.shard_map(
+        new_params, new_state = shard_map_compat(
             inner_sync,
             axis_names={"model"},
             in_specs=(pspecs, pspecs, sspecs, P()),
             out_specs=(pspecs, sspecs),
             check_vma=False,
+            fallback_mesh=mesh,
         )(grads, params, rgc_state, lr)
         return jax.lax.pmean(loss, baxes), new_params, new_state
 
@@ -127,7 +155,7 @@ def make_train_step(
     # In the outer shard_map only batch axes are manual; params / state / lr
     # are replicated across them (P() prefix specs); the model axis stays
     # auto (GSPMD) — model sharding rides on the array shardings.
-    stepped = jax.shard_map(
+    stepped = shard_map_compat(
         outer, mesh=mesh, axis_names=set(baxes),
         in_specs=(P(), P(), batch_specs, P()),
         out_specs=(P(), P(), P()),
@@ -234,9 +262,8 @@ class Trainer:
     def init_state(self, seed: Optional[int] = None) -> TrainState:
         params = self.model.init_params(
             self.tc.seed if seed is None else seed)
-        rgc_cfg = make_rgc_config(self.tc, self.mesh)
-        return TrainState(params=params, rgc=rgc_init(params, rgc_cfg),
-                          step=0)
+        sync = make_gradient_sync(self.tc, self.mesh)
+        return TrainState(params=params, rgc=sync.init(params), step=0)
 
     def _step_fn(self, density: float) -> Callable:
         if density not in self._steps:

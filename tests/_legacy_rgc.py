@@ -1,0 +1,171 @@
+"""Frozen copy of the pre-decomposition ``rgc_apply`` monolith.
+
+This is the seed's fused Algorithm 4 + 5 implementation, kept verbatim as
+the reference for the bitwise parity test in tests/test_api.py: the
+composed ``GradientSync`` pipeline must reproduce it exactly (params AND
+state) on every dispatch path. Do not "fix" or modernize this file — its
+value is being frozen. (It retains the seed's 4-bytes-per-element
+dispatch assumption, so parity is asserted on f32 models where that
+matches the real itemsize.)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection as sel_lib
+from repro.core import sync as sync_lib
+from repro.core.cost_model import choose_method
+from repro.core.residual import (LeafState, accumulate, init_leaf,
+                                 local_clip_scale, mask_communicated)
+from repro.core.rgc import RGCConfig
+
+
+def leaf_bytes(x: jax.Array) -> int:
+    return x.size * 4  # the seed's assumption: f32 everywhere
+
+
+def leaf_method(x: jax.Array, cfg: RGCConfig) -> str:
+    return choose_method(
+        leaf_bytes(x), cfg.dense_threshold_bytes, cfg.trimmed_threshold_bytes
+    )
+
+
+def legacy_rgc_init(params: Any, cfg: RGCConfig | None = None) -> Any:
+    cfg = cfg or RGCConfig()
+    return jax.tree.map(
+        lambda p: init_leaf(p, momentum=bool(cfg.momentum),
+                            residual_dtype=cfg.residual_dtype), params)
+
+
+def _select(flat_v: jax.Array, k: int, method: str, state: LeafState,
+            cfg: RGCConfig, quantize: bool):
+    """Run the statically chosen selector. Returns (Selected, new LeafState)."""
+    if cfg.backend == "pallas":
+        from repro.kernels import ops as kops
+        if method == "trimmed_topk" and not quantize:
+            return kops.trimmed_topk(flat_v, k), state
+        if method == "threshold_binary_search" and not quantize:
+            selected, thr = kops.threshold_binary_search(flat_v, k)
+            return selected, state._replace(threshold=thr)
+    if quantize:
+        if method == "trimmed_topk":
+            s = sel_lib.trimmed_topk_quant(flat_v, k, state.phase)
+        else:
+            s = sel_lib.threshold_binary_search_quant(flat_v, k, state.phase)
+        return s, state._replace(phase=(state.phase + 1) % 2)
+    if method == "trimmed_topk":
+        return sel_lib.trimmed_topk(flat_v, k), state
+    # sampled threshold binary search with threshold reuse (interval = 5)
+    def refresh(_):
+        s, thr = sel_lib.threshold_binary_search(flat_v, k)
+        return s, thr
+    def reuse(_):
+        s = sel_lib.threshold_filter(flat_v, state.threshold, capacity=2 * k)
+        return s, state.threshold
+    do_refresh = (state.interval % cfg.bsearch_interval) == 0
+    s, thr = jax.lax.cond(do_refresh, refresh, reuse, operand=None)
+    return s, state._replace(threshold=thr, interval=state.interval + 1)
+
+
+def _capacity(k: int, method: str) -> int:
+    return k if method == "trimmed_topk" else 2 * k
+
+
+def legacy_rgc_apply(
+    grads: Any,
+    params: Any,
+    state: Any,
+    *,
+    lr: jax.Array,
+    cfg: RGCConfig,
+    density: float | None = None,
+) -> tuple[Any, Any]:
+    """One synchronized RGC update (the seed's fused monolith)."""
+    density = cfg.density if density is None else density
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_p = treedef.flatten_up_to(params)
+    leaves_s = treedef.flatten_up_to(state)
+    paths = [jax.tree_util.keystr(kp)
+             for kp, _ in jax.tree_util.tree_flatten_with_path(grads)[0]]
+    n_workers = 1
+    for ax in cfg.sync_axes:
+        n_workers *= jax.lax.axis_size(ax)
+
+    # --- optional DGC local clipping (pre-accumulation, N^{-1/2}) ----------
+    if cfg.local_clip is not None:
+        sq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves_g)
+        scale = local_clip_scale(sq, cfg.local_clip, n_workers)
+        leaves_g = [g * scale for g in leaves_g]
+
+    # density == 1.0 sentinel: RedSync dense warm-up (§5.7) — everything dense
+    all_dense = density >= 1.0
+
+    plan = []  # (i, method, k, cap, quantize)
+    for i, (g, p) in enumerate(zip(leaves_g, leaves_p)):
+        method = "dense" if all_dense else leaf_method(g, cfg)
+        if method == "dense":
+            plan.append((i, "dense", 0, 0, False))
+            continue
+        k = max(1, int(math.ceil(density * g.size)))
+        quant = cfg.quantize and not any(t in paths[i] for t in cfg.no_quant_paths)
+        plan.append((i, method, k, _capacity(k, method), quant))
+
+    # --- pass 1: residual update + selection + message packing -------------
+    messages: list[jax.Array] = []
+    msg_meta: list[tuple[int, int, bool]] = []   # (leaf index, cap, quant)
+    new_states: list[LeafState] = list(leaves_s)
+    for i, method, k, cap, quant in plan:
+        if method == "dense":
+            continue
+        st = accumulate(
+            leaves_g[i], leaves_p[i], leaves_s[i],
+            momentum=cfg.momentum, nesterov=cfg.nesterov,
+            weight_decay=cfg.weight_decay,
+        )
+        flat_v = st.residual.reshape(-1).astype(jnp.float32)
+        selected, st = _select(flat_v, k, method, st, cfg, quant)
+        st = mask_communicated(st, selected.indices, momentum=bool(cfg.momentum))
+        new_states[i] = st
+        messages.append(sync_lib.pack(selected, quant))
+        msg_meta.append((i, cap, quant))
+
+    # --- pass 2: synchronization -------------------------------------------
+    if messages:
+        if cfg.fuse_messages:
+            gathered = sync_lib.fused_allgather(messages, cfg.sync_axes)
+        else:
+            gathered = [sync_lib.sparse_allgather(m, cfg.sync_axes)
+                        for m in messages]
+    else:
+        gathered = []
+
+    # --- pass 3: decompress + apply ----------------------------------------
+    new_params: list[jax.Array] = list(leaves_p)
+    for buf, (i, cap, quant) in zip(gathered, msg_meta):
+        g_sum = sync_lib.unpack_decompress(buf, leaves_p[i].size, cap, quant)
+        upd = (g_sum / n_workers).reshape(leaves_p[i].shape)
+        new_params[i] = (leaves_p[i].astype(jnp.float32)
+                         - lr * upd).astype(leaves_p[i].dtype)
+
+    for i, method, k, cap, quant in plan:
+        if method != "dense":
+            continue
+        g_mean = sync_lib.dense_allreduce_mean(leaves_g[i], cfg.sync_axes)
+        st = leaves_s[i]
+        if cfg.weight_decay:
+            g_mean = g_mean + cfg.weight_decay * leaves_p[i].astype(jnp.float32)
+        if cfg.momentum:
+            u = cfg.momentum * st.momentum + g_mean
+            upd = (g_mean + cfg.momentum * u) if cfg.nesterov else u
+            new_states[i] = st._replace(momentum=u)
+        else:
+            upd = g_mean
+        new_params[i] = (leaves_p[i].astype(jnp.float32)
+                         - lr * upd).astype(leaves_p[i].dtype)
+
+    return (jax.tree.unflatten(treedef, new_params),
+            jax.tree.unflatten(treedef, new_states))

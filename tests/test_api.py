@@ -1,0 +1,250 @@
+"""Composable compression API: registry round-trip, per-compressor
+compress→decompress identity, dtype-aware dispatch, and bitwise parity of
+the composed ``GradientSync`` pipeline against the frozen legacy
+``rgc_apply`` monolith (tests/_legacy_rgc.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.core import registry
+from repro.core.dispatch import FixedPolicy, SizeBasedPolicy, leaf_nbytes
+from repro.core.gradient_sync import build_gradient_sync
+from repro.core.rgc import RGCConfig, gradient_sync_from_rgc_config
+from repro.core.sync import message_len
+from repro.models.registry import get_model
+
+from _legacy_rgc import legacy_rgc_apply, legacy_rgc_init
+
+SELECTING = ["exact_topk", "trimmed_topk", "threshold_bsearch"]
+QUANTIZED = [f"quantized({n})" for n in SELECTING]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_every_compressor_constructible_by_name(self):
+        names = registry.names(registry.COMPRESSOR)
+        assert {"dense", "exact_topk", "trimmed_topk",
+                "threshold_bsearch", "quantized"} <= set(names)
+        for name in names:
+            comp = registry.make(registry.COMPRESSOR, name)
+            assert hasattr(comp, "compress")
+            assert comp.capacity(8) >= (0 if name == "dense" else 8)
+
+    def test_every_transport_constructible_by_name(self):
+        names = registry.names(registry.TRANSPORT)
+        assert set(names) == {"fused_allgather", "per_leaf_allgather",
+                              "dense_psum"}
+        for name in names:
+            tr = registry.make(registry.TRANSPORT, name, sync_axes=())
+            assert tr.num_workers() == 1
+
+    def test_every_policy_constructible_by_name(self):
+        for name in registry.names(registry.DISPATCH_POLICY):
+            pol = registry.make(registry.DISPATCH_POLICY, name)
+            assert pol.compressor_for("", jnp.zeros((4,))) in \
+                registry.names(registry.COMPRESSOR)
+
+    def test_nested_spec(self):
+        comp = registry.make(registry.COMPRESSOR, "quantized(trimmed_topk)")
+        assert comp.quantized and comp.inner.name == "trimmed_topk"
+        assert comp.capacity(8) == 8
+
+    def test_unknown_names_raise(self):
+        with pytest.raises(KeyError):
+            registry.make(registry.COMPRESSOR, "nope")
+        with pytest.raises(KeyError):
+            registry.make(registry.COMPRESSOR, "quantized(nope)")
+        with pytest.raises(ValueError):
+            build_gradient_sync("nope")
+
+    def test_params_threaded_to_factories(self):
+        comp = registry.make(registry.COMPRESSOR, "threshold_bsearch",
+                             bsearch_interval=7, backend="jnp",
+                             unrelated_param=1)
+        assert comp.interval == 7
+
+
+# ---------------------------------------------------------------------------
+# compress -> pack -> (1-worker) allgather -> decompress identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", SELECTING + QUANTIZED)
+def test_compress_decompress_identity(name):
+    n, k = 512, 16
+    rng = np.random.default_rng(sum(map(ord, name)))
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    comp = registry.make(registry.COMPRESSOR, name)
+    tr = registry.make(registry.TRANSPORT, "fused_allgather", sync_axes=())
+
+    st = comp.init_leaf(x, momentum=False)
+    sel, _ = comp.compress(x, k, st)
+    msg = tr.pack(sel, comp.quantized)
+    assert msg.shape[0] == message_len(comp.capacity(k), comp.quantized)
+
+    (gathered,) = tr.allgather([msg])
+    dense = np.asarray(comp.decompress(gathered, n, k))
+
+    cnt = int(sel.count)
+    assert 1 <= cnt <= comp.capacity(k)
+    idx = np.asarray(sel.indices)
+    assert np.all(idx[cnt:] == n)          # padding slots carry sentinel
+    expect = np.zeros(n, np.float32)
+    np.add.at(expect, idx[:cnt], np.asarray(sel.values)[:cnt])
+    np.testing.assert_allclose(dense, expect, rtol=1e-6, atol=1e-6)
+    if comp.quantized:                     # single shared magnitude
+        nz = dense[dense != 0]
+        assert nz.size == cnt and np.allclose(nz, nz[0])
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware dispatch (the leaf_bytes bug fix)
+# ---------------------------------------------------------------------------
+
+class TestDispatch:
+    def test_leaf_nbytes_uses_real_itemsize(self):
+        assert leaf_nbytes(jnp.zeros((100,), jnp.float32)) == 400
+        assert leaf_nbytes(jnp.zeros((100,), jnp.bfloat16)) == 200
+        assert leaf_nbytes(jnp.zeros((100,), jnp.int8)) == 100
+        # works on abstract leaves too (dryrun eval_shape path)
+        assert leaf_nbytes(jax.ShapeDtypeStruct((64, 64), jnp.bfloat16)) \
+            == 8192
+
+    def test_bf16_dispatch_regression(self):
+        """A 48K-element bf16 leaf is 96 KB — below the 128 KB dense
+        boundary. The seed's 4-bytes/element assumption called it 192 KB
+        and mis-dispatched it to trimmed_topk."""
+        policy = SizeBasedPolicy()
+        bf16 = jax.ShapeDtypeStruct((48 * 1024,), jnp.bfloat16)
+        f32 = jax.ShapeDtypeStruct((48 * 1024,), jnp.float32)
+        assert policy.compressor_for("", bf16) == "dense"
+        assert policy.compressor_for("", f32) == "trimmed_topk"
+        # same story at the 4 MB trimmed/bsearch boundary
+        bf16_big = jax.ShapeDtypeStruct((1536 * 1024,), jnp.bfloat16)  # 3 MB
+        f32_big = jax.ShapeDtypeStruct((1536 * 1024,), jnp.float32)   # 6 MB
+        assert policy.compressor_for("", bf16_big) == "trimmed_topk"
+        assert policy.compressor_for("", f32_big) == "threshold_bsearch"
+
+    def test_fixed_policy(self):
+        pol = FixedPolicy("exact_topk")
+        assert pol.compressor_for("any", jnp.zeros((2,))) == "exact_topk"
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: GradientSync == the frozen legacy monolith
+# ---------------------------------------------------------------------------
+
+# thresholds sized so smoke-model leaves land on all three §5.5 methods
+_TH = dict(dense_threshold_bytes=1024, trimmed_threshold_bytes=64 * 1024)
+
+PARITY_CFGS = {
+    "rgc_mix": RGCConfig(density=0.02, momentum=0.9, sync_axes=(),
+                         bsearch_interval=2, **_TH),
+    "rgc_quant": RGCConfig(density=0.02, momentum=0.0, quantize=True,
+                           sync_axes=(), **_TH),
+    "dense_warmup": RGCConfig(density=1.0, momentum=0.9, sync_axes=(),
+                              **_TH),
+    "clip_wd_nesterov_unfused": RGCConfig(
+        density=0.02, momentum=0.9, nesterov=True, weight_decay=1e-4,
+        local_clip=1.0, fuse_messages=False, sync_axes=(), **_TH),
+}
+
+
+def _f32_model(arch):
+    cfg = get_config(arch, smoke=True)
+    # parity must hold where the seed's 4-byte assumption was correct;
+    # bf16 dispatch intentionally differs (see TestDispatch)
+    return get_model(dataclasses.replace(cfg, dtype=jnp.float32))
+
+
+def _grads_like(params, step):
+    leaves, treedef = jax.tree.flatten(params)
+    out = []
+    for j, p in enumerate(leaves):
+        rng = np.random.default_rng(1000 * step + j)
+        out.append(jnp.asarray(rng.standard_normal(p.shape) * 0.1,
+                               jnp.float32).astype(p.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _assert_trees_bitwise(a, b, what):
+    la, ta = jax.tree_util.tree_flatten_with_path(a)
+    lb, _ = jax.tree_util.tree_flatten_with_path(b)
+    assert len(la) == len(lb)
+    for (kp, xa), (_, xb) in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(xa), np.asarray(xb),
+            err_msg=f"{what} mismatch at {jax.tree_util.keystr(kp)}")
+
+
+@pytest.mark.parametrize("arch", ["paper-lstm", "internlm2-1.8b"])
+@pytest.mark.parametrize("cfg_name", sorted(PARITY_CFGS))
+def test_gradient_sync_matches_legacy_bitwise(arch, cfg_name):
+    cfg = PARITY_CFGS[cfg_name]
+    model = _f32_model(arch)
+    params = model.init_params(0)
+
+    if cfg_name != "dense_warmup":
+        # the run must actually exercise the sparse paths
+        policy = SizeBasedPolicy(cfg.dense_threshold_bytes,
+                                 cfg.trimmed_threshold_bytes)
+        methods = {policy.compressor_for("", p)
+                   for p in jax.tree.leaves(params)}
+        assert {"trimmed_topk", "threshold_bsearch"} <= methods
+
+    sync = gradient_sync_from_rgc_config(cfg)
+    lp, ls = params, legacy_rgc_init(params, cfg)
+    np_, ns = params, sync.init(params)
+    _assert_trees_bitwise(ls, ns, "init state")
+
+    lr = jnp.float32(0.1)
+    for step in range(3):
+        g = _grads_like(params, step)
+        lp, ls = legacy_rgc_apply(g, lp, ls, lr=lr, cfg=cfg)
+        np_, ns = sync.update(g, ns, np_, lr)
+        _assert_trees_bitwise(lp, np_, f"params (step {step})")
+        _assert_trees_bitwise(ls, ns, f"state (step {step})")
+
+
+# ---------------------------------------------------------------------------
+# registered compressor names train end-to-end through Trainer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("optimizer", ["threshold_bsearch",
+                                       "quantized(exact_topk)"])
+def test_registered_optimizer_trains_end_to_end(optimizer):
+    from repro.data import bigram_batches
+    from repro.train.trainer import Trainer
+
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    tc = TrainConfig(lr=0.2, momentum=0.9, optimizer=optimizer,
+                     density=0.01)
+    tr = Trainer(cfg, tc)
+    state = tr.init_state()
+    losses = []
+    state = tr.run(state, bigram_batches(cfg.vocab_size, 2, 32, seed=0),
+                   3, log_every=1, log_fn=lambda s: losses.append(s))
+    assert state.step == 3
+    for leaf in jax.tree.leaves(state.params):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+def test_per_leaf_transport_trains_end_to_end():
+    from repro.data import bigram_batches
+    from repro.train.trainer import Trainer
+
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    tc = TrainConfig(lr=0.2, optimizer="rgc", density=0.01,
+                     transport="per_leaf_allgather")
+    tr = Trainer(cfg, tc)
+    state = tr.run(tr.init_state(),
+                   bigram_batches(cfg.vocab_size, 2, 32, seed=0),
+                   2, log_every=0)
+    assert state.step == 2

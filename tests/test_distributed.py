@@ -8,9 +8,19 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
 
 _PROG = os.path.join(os.path.dirname(__file__), "_dist_prog.py")
+
+# The trainer's nested partial-manual shard_map (manual data axes, auto
+# model axis, GSPMD constraints inside) needs the modern jax.shard_map /
+# XLA; the legacy experimental API's SPMD partitioner aborts with
+# "Check failed: sharding.IsManualSubgroup()". The fully-manual oracle
+# case runs everywhere.
+_legacy_jax = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="nested partial-manual shard_map requires modern jax/XLA")
 
 
 def _run(case: str) -> None:
@@ -27,6 +37,11 @@ def _run(case: str) -> None:
     assert "OK" in proc.stdout
 
 
-@pytest.mark.parametrize("case", ["dense", "oracle", "variants", "multipod"])
+@pytest.mark.parametrize("case", [
+    pytest.param("dense", marks=_legacy_jax),
+    "oracle",
+    pytest.param("variants", marks=_legacy_jax),
+    pytest.param("multipod", marks=_legacy_jax),
+])
 def test_distributed(case):
     _run(case)

@@ -4,7 +4,15 @@ import os
 import subprocess
 import sys
 
+import jax
+import pytest
 
+
+@pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="nested partial-manual shard_map requires modern jax/XLA "
+    "(legacy SPMD partitioner aborts on the trainer's mixed "
+    "manual/auto pattern)")
 def test_dryrun_small_mesh():
     prog = os.path.join(os.path.dirname(__file__), "_dryrun_prog.py")
     env = dict(os.environ)

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (see "
+                    "requirements-dev.txt); skipping property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import selection as sel
 from repro.core import sync
