@@ -4,9 +4,12 @@
 
 Single process, CPU-friendly. Shows the optimizer modes side by side on
 the same model + data budget: dense baseline, RGC (0.1%-style sparse
-sync, here 1% for the tiny model), quantized RGC, and a registry-named
+sync, here 1% for the tiny model), quantized RGC, a registry-named
 compressor ("threshold_bsearch" forces Alg 3 on every leaf — any name
-from repro.core.registry works, e.g. "quantized(trimmed_topk)").
+from repro.core.registry works, e.g. "quantized(trimmed_topk)"), and the
+DGC-corrected pipeline ("momentum+clip(threshold_bsearch)": momentum
+correction + local clipping ahead of the selector — see
+repro.core.correction for the spec grammar).
 """
 import jax.numpy as jnp
 
@@ -19,9 +22,13 @@ def main() -> None:
     cfg = get_config("internlm2-1.8b", smoke=True)
     print(f"model: {cfg.name} (reduced: {cfg.num_layers}L d={cfg.d_model})")
 
-    for optimizer in ("dense", "rgc", "rgc_quant", "threshold_bsearch"):
-        tc = TrainConfig(lr=0.3, momentum=0.0, optimizer=optimizer,
-                         density=0.01, local_clip=1.0)
+    for optimizer in ("dense", "rgc", "rgc_quant", "threshold_bsearch",
+                      "momentum+clip(threshold_bsearch)"):
+        # the "momentum" correction takes its coefficient from tc.momentum
+        corrected = "momentum" in optimizer
+        tc = TrainConfig(lr=0.1 if corrected else 0.3,
+                         momentum=0.9 if corrected else 0.0,
+                         optimizer=optimizer, density=0.01, local_clip=1.0)
         trainer = Trainer(cfg, tc)
         state = trainer.init_state()
         print(f"\n--- optimizer = {optimizer} ---")

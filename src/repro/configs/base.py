@@ -123,6 +123,14 @@ class TrainConfig:
     # rgc | rgc_quant | dense | any registered compressor spec
     # (repro.core.registry), e.g. "threshold_bsearch" or
     # "quantized(trimmed_topk)" — fixed per-leaf dispatch through it.
+    # The spec may prefix '+'-joined DGC correction names
+    # (repro.core.correction: momentum, factor_masking/masking,
+    # local_clip/clip, warmup) ahead of the base, e.g.
+    # "momentum+clip(threshold_bsearch)" or "warmup(rgc)"; corrections-only
+    # specs default the base to "rgc". Spec corrections are ADDITIVE: the
+    # momentum/local_clip fields below stay the on/off switches for their
+    # corrections whether or not the spec names them (ablate by zeroing
+    # the field), so "warmup(rgc)" == "rgc" + the density ramp.
     # ("dense_fsdp" is handled only by launch/dryrun's
     # make_fsdp_dense_step branch, not by the GradientSync builder.)
     optimizer: str = "rgc"

@@ -3,18 +3,22 @@
 Layering:
   * ``registry``      — string-addressable component registry
   * ``api``           — ``Compressor`` / ``Transport`` / ``DispatchPolicy``
-                        protocols
+                        / ``Correction`` protocols
   * ``compressors``   — dense / exact_topk / trimmed_topk /
                         threshold_bsearch / quantized(inner)
+  * ``correction``    — momentum / factor_masking / local_clip / warmup
+                        (DGC convergence corrections + spec grammar)
   * ``transport``     — fused_allgather / per_leaf_allgather / dense_psum
   * ``dispatch``      — size_based (§5.5, real dtype bytes) / fixed
   * ``gradient_sync`` — the composed optax-style transform
   * ``rgc``           — legacy ``rgc_init``/``rgc_apply`` shims
 """
 from . import registry
-from .api import Compressor, DispatchPolicy, Transport
+from .api import Compressor, Correction, DispatchPolicy, Transport
 from .compressors import Dense, ExactTopK, Quantized, ThresholdBSearch, \
     TrimmedTopK
+from .correction import (CorrectionBase, FactorMasking, LocalClip,
+                         MomentumCorrection, Warmup, split_corrections)
 from .cost_model import (NetworkModel, PRESETS, choose_method, speedup,
                          t_dense, t_sparse)
 from .dispatch import FixedPolicy, SizeBasedPolicy, leaf_nbytes
@@ -28,8 +32,10 @@ from .transport import DensePsum, FusedAllgather, PerLeafAllgather
 
 __all__ = [
     "registry",
-    "Compressor", "DispatchPolicy", "Transport",
+    "Compressor", "Correction", "DispatchPolicy", "Transport",
     "Dense", "ExactTopK", "Quantized", "ThresholdBSearch", "TrimmedTopK",
+    "CorrectionBase", "FactorMasking", "LocalClip", "MomentumCorrection",
+    "Warmup", "split_corrections",
     "NetworkModel", "PRESETS", "choose_method", "speedup", "t_dense",
     "t_sparse",
     "FixedPolicy", "SizeBasedPolicy", "leaf_nbytes",

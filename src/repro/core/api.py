@@ -2,7 +2,7 @@
 
 The paper's pipeline — residual accumulation → communication-set selection
 → packing → sparse allgather → decompression → apply — is decomposed into
-three swappable protocols, each string-addressable via
+four swappable protocols, each string-addressable via
 ``repro.core.registry``:
 
 ``Compressor``
@@ -25,7 +25,16 @@ three swappable protocols, each string-addressable via
     §5.5 byte-size dispatch (using real ``dtype.itemsize`` bytes);
     ``fixed`` routes every leaf through one named compressor.
 
-``GradientSync`` (repro.core.gradient_sync) composes the three into an
+``Correction``
+    Convergence-preserving transforms (Deep Gradient Compression, Lin et
+    al. 1712.01887) that run AHEAD of any registered compressor:
+    gradient pre-transforms (``local_clip``), residual accumulation
+    ownership (``momentum`` correction), post-selection state masking
+    (``factor_masking``), and the density warm-up ramp (``warmup``).
+    Implementations in ``repro.core.correction``; composed via the
+    extended spec grammar, e.g. ``"momentum+clip(threshold_bsearch)"``.
+
+``GradientSync`` (repro.core.gradient_sync) composes the four into an
 optax-style ``init(params)`` / ``update(grads, state, params, lr)``
 transform; ``rgc_apply`` is now a thin shim over it.
 
@@ -99,4 +108,43 @@ class DispatchPolicy(Protocol):
 
     def compressor_for(self, path: str, leaf: jax.Array) -> str:
         """Registered compressor name for this leaf ("dense" = allreduce)."""
+        ...
+
+
+@runtime_checkable
+class Correction(Protocol):
+    """Convergence correction run ahead of any compressor (DGC lineage).
+
+    ``GradientSync.update`` folds every configured correction through four
+    hooks, in pipeline order: ``on_grads`` (tree-level gradient transform,
+    pre-accumulation), ``accumulate`` (optional ownership of a leaf's
+    residual update — first correction returning non-None wins; None means
+    "not mine" and core falls back to plain ``V += g``),
+    ``on_communicated`` (state masking after selection; the residual is
+    already cleared), and ``density_at`` (the warm-up schedule; None means
+    "no schedule owned here"). ``repro.core.correction.CorrectionBase``
+    provides no-op defaults for all four.
+    """
+
+    name: str
+    needs_momentum_buffer: bool   # allocate param-shaped LeafState.momentum
+
+    def on_grads(self, grads: list[jax.Array], params: list[jax.Array],
+                 num_workers: int) -> list[jax.Array]:
+        """Transform the whole local gradient list before accumulation."""
+        ...
+
+    def accumulate(self, grad: jax.Array, param: jax.Array,
+                   state: LeafState, *,
+                   weight_decay: float) -> LeafState | None:
+        """Fold this leaf's gradient into its residual; None = pass."""
+        ...
+
+    def on_communicated(self, state: LeafState,
+                        indices: jax.Array) -> LeafState:
+        """Mask leaf state at communicated coordinates (padding-safe)."""
+        ...
+
+    def density_at(self, step: int, target: float) -> float | None:
+        """Scheduled density at ``step``; None = no schedule owned here."""
         ...

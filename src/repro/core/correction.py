@@ -1,0 +1,257 @@
+"""Correction implementations (DGC, Lin et al. 1712.01887), registry-addressable.
+
+RedSync's accuracy story rests on residual accumulation, but Deep Gradient
+Compression showed that four auxiliary techniques are what keep aggressively
+sparsified training at dense-equivalent convergence. Each is a ``Correction``
+(see ``repro.core.api``) that ``GradientSync.update`` runs AHEAD of whatever
+compressor the dispatch policy picks:
+
+* ``momentum``       — momentum correction: accumulate a local velocity U and
+                       add U (not g) into the residual V (Alg 4 l.11–19).
+                       Includes DGC momentum factor masking of its own
+                       velocity buffer at communicated coordinates, so
+                       ``"momentum+…"`` alone is convergence-safe.
+* ``factor_masking`` — standalone momentum factor masking (alias
+                       ``masking``): clear U at communicated coordinates.
+                       For pipelines that manage velocity some other way;
+                       redundant (and harmless) next to ``momentum``.
+* ``local_clip``     — DGC local gradient clipping (alias ``clip``): scale
+                       the whole local gradient so its norm stays under
+                       N^{-1/2} of the global clip threshold, *before*
+                       residual accumulation.
+* ``warmup``         — the §5.7 sparsity ramp: exposes a
+                       ``core.schedule.DensitySchedule`` through
+                       ``density_at`` so the trainer ramps density (or runs
+                       RedSync's dense warm-up) before the target sparsity.
+
+Corrections compose with compressors through the extended ``TrainConfig``
+spec grammar::
+
+    "momentum+clip(threshold_bsearch)"      # corrections wrap a compressor
+    "momentum+clip+threshold_bsearch"       # equivalent flat form
+    "warmup(rgc)"                           # corrections around §5.5 dispatch
+    "momentum"                              # base defaults to "rgc"
+
+``split_corrections`` parses a spec into (correction names, base optimizer
+spec); the base spec is whatever ``build_gradient_sync`` already accepted
+(``rgc`` / ``rgc_quant`` / ``dense`` / any registered compressor spec).
+
+Factories receive the shared parameter bag (``momentum``, ``nesterov``,
+``local_clip``, ``density``, ``warmup_steps_per_stage``, ...) and ignore
+what they don't use, so ``registry.make(CORRECTION, name, **params)`` works
+uniformly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import registry
+from .residual import LeafState, accumulate, local_clip_scale, mask_momentum
+from .schedule import DGC_WARMUP, DensitySchedule
+
+
+class CorrectionBase:
+    """No-op defaults for every ``Correction`` hook.
+
+    Subclasses override the hooks they need; ``GradientSync.update`` folds
+    all registered corrections through each hook in pipeline order.
+    """
+
+    name = "?"
+    # True if this correction reads/writes the param-shaped velocity buffer
+    # (LeafState.momentum); GradientSync allocates it when any correction
+    # (or the dense-leaf momentum SGD) needs it.
+    needs_momentum_buffer = False
+
+    def on_grads(self, grads: list[jax.Array], params: list[jax.Array],
+                 num_workers: int) -> list[jax.Array]:
+        """Tree-level gradient transform before residual accumulation."""
+        return grads
+
+    def accumulate(self, grad: jax.Array, param: jax.Array,
+                   state: LeafState, *,
+                   weight_decay: float) -> LeafState | None:
+        """Own this leaf's residual accumulation; None = not this correction.
+
+        The first correction returning a state wins; with none,
+        ``GradientSync`` does the plain ``V += g`` accumulation.
+        """
+        return None
+
+    def on_communicated(self, state: LeafState,
+                        indices: jax.Array) -> LeafState:
+        """Post-selection state masking (residual is already cleared)."""
+        return state
+
+    def density_at(self, step: int, target: float) -> float | None:
+        """Scheduled density for this step; None = no schedule owned here."""
+        return None
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<correction {self.name}>"
+
+
+class MomentumCorrection(CorrectionBase):
+    """DGC momentum correction on the residual buffer (Alg 4 l.11–19).
+
+    U ← m·U + g locally; V ← V + U (plus g again under Nesterov). Both the
+    residual (cleared by core) and this velocity are cleared at communicated
+    coordinates — the velocity clear IS momentum factor masking, owned here
+    because stale velocity re-adding communicated mass is the known DGC
+    divergence mode; ``"momentum"`` without ``"factor_masking"`` stays safe.
+    """
+
+    name = "momentum"
+    needs_momentum_buffer = True
+
+    def __init__(self, momentum: float = 0.9, nesterov: bool = False):
+        self.momentum = momentum
+        self.nesterov = nesterov
+
+    def accumulate(self, grad, param, state, *, weight_decay):
+        return accumulate(grad, param, state, momentum=self.momentum,
+                          nesterov=self.nesterov, weight_decay=weight_decay)
+
+    def on_communicated(self, state, indices):
+        return mask_momentum(state, indices)
+
+
+class FactorMasking(CorrectionBase):
+    """Standalone DGC momentum factor masking: clear U at communicated
+    coordinates. No-op when the leaf carries no param-shaped velocity."""
+
+    name = "factor_masking"
+
+    def on_communicated(self, state, indices):
+        return mask_momentum(state, indices)
+
+
+class LocalClip(CorrectionBase):
+    """DGC local gradient clipping (§5.6): scale the LOCAL gradient so its
+    norm stays under N^{-1/2} of the global clip threshold, before the
+    residual accumulates it."""
+
+    name = "local_clip"
+
+    def __init__(self, clip_norm: float = 1.0):
+        self.clip_norm = clip_norm
+
+    def on_grads(self, grads, params, num_workers):
+        sq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads)
+        scale = local_clip_scale(sq, self.clip_norm, num_workers)
+        return [g * scale for g in grads]
+
+
+class Warmup(CorrectionBase):
+    """Sparsity warm-up ramp (§5.7), driving ``core.schedule``.
+
+    Wraps a ``DensitySchedule``; the trainer asks
+    ``GradientSync.scheduled_density(step)`` which folds through this hook.
+    Density is static per compiled step, so the ramp manifests as the
+    trainer recompiling at stage boundaries — this correction owns *what*
+    the density is, not *when* jit retraces.
+    """
+
+    name = "warmup"
+    DEFAULT_STEPS_PER_STAGE = 25
+
+    def __init__(self, schedule: DensitySchedule):
+        self.schedule = schedule
+
+    def density_at(self, step, target):
+        return self.schedule.density_at(step)
+
+
+# --- spec grammar ----------------------------------------------------------
+
+def _split_top_plus(spec: str) -> tuple[str, str | None]:
+    """First top-level '+'-separated term, and the remainder (or None)."""
+    depth = 0
+    for i, ch in enumerate(spec):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        elif ch == "+" and depth == 0:
+            return spec[:i].strip(), spec[i + 1:].strip()
+    return spec.strip(), None
+
+
+def _is_correction(name: str) -> bool:
+    return name in registry.names(registry.CORRECTION)
+
+
+def split_corrections(spec: str) -> tuple[list[str], str]:
+    """Parse the extended optimizer grammar into (corrections, base spec).
+
+    ``"momentum+clip(threshold_bsearch)"`` → (["momentum", "clip"],
+    "threshold_bsearch"); a correction term may carry the rest of the
+    pipeline in parens (``"warmup(rgc)"``) or continue with ``+``; the base
+    (non-correction) term must come last and defaults to ``""`` when the
+    spec is corrections-only.
+    """
+    corrections: list[str] = []
+    rest = spec.strip()
+    while rest:
+        term, tail = _split_top_plus(rest)
+        head, _, paren = term.partition("(")
+        head = head.strip()
+        if paren and term.endswith(")") and _is_correction(head):
+            if tail is not None:
+                raise ValueError(
+                    f"bad optimizer spec {spec!r}: parenthesized correction "
+                    f"{head!r} must wrap the rest of the pipeline")
+            corrections.append(head)
+            rest = paren[:-1].strip()
+            continue
+        if _is_correction(term):
+            corrections.append(term)
+            rest = tail or ""
+            continue
+        if tail is not None:
+            raise ValueError(
+                f"bad optimizer spec {spec!r}: {term!r} is not a registered "
+                f"correction {registry.names(registry.CORRECTION)} and only "
+                f"the final term may name the base optimizer")
+        return corrections, term
+    return corrections, ""
+
+
+# --- registration ----------------------------------------------------------
+
+@registry.register(registry.CORRECTION, "momentum")
+def _momentum(momentum: float = 0.9, nesterov: bool = False,
+              **_: Any) -> MomentumCorrection:
+    return MomentumCorrection(momentum=momentum, nesterov=nesterov)
+
+
+@registry.register(registry.CORRECTION, "factor_masking")
+def _factor_masking(**_: Any) -> FactorMasking:
+    return FactorMasking()
+
+
+@registry.register(registry.CORRECTION, "local_clip")
+def _local_clip(local_clip: float | None = None, **_: Any) -> LocalClip:
+    return LocalClip(clip_norm=1.0 if local_clip is None else local_clip)
+
+
+@registry.register(registry.CORRECTION, "warmup")
+def _warmup(density: float = 0.001, warmup_steps_per_stage: int = 0,
+            dense_warmup: bool = False,
+            warmup_stages: tuple[float, ...] = DGC_WARMUP,
+            **_: Any) -> Warmup:
+    # a spec that *names* warmup asks for an actual ramp: fall back to a
+    # default stage length when the config leaves it unset
+    steps = (warmup_steps_per_stage if warmup_steps_per_stage > 0
+             else Warmup.DEFAULT_STEPS_PER_STAGE)
+    return Warmup(DensitySchedule(target=density,
+                                  warmup_steps_per_stage=steps,
+                                  stages=tuple(warmup_stages),
+                                  dense_warmup=dense_warmup))
+
+
+registry.register_alias(registry.CORRECTION, "clip", "local_clip")
+registry.register_alias(registry.CORRECTION, "masking", "factor_masking")

@@ -91,6 +91,18 @@ TRIMMED_THRESHOLD_BYTES = 4 * 1024 * 1024  # below: trimmed top-k; above: bsearc
 def choose_method(param_bytes: int,
                   dense_threshold: int = DENSE_THRESHOLD_BYTES,
                   trimmed_threshold: int = TRIMMED_THRESHOLD_BYTES) -> str:
+    """§5.5 dispatch with PINNED half-open boundaries.
+
+    ``[0, dense)`` → dense; ``[dense, trimmed)`` → trimmed top-k;
+    ``[trimmed, ∞)`` → threshold binary search. The paper says "smaller
+    than 128 KB", so a leaf of EXACTLY 128 KB is sparsified (trimmed) and
+    one of exactly 4 MB goes to the binary search. 0-byte leaves are
+    dense (nothing to select from; the dense collective is a no-op).
+    ``dispatch.SizeBasedPolicy`` delegates here, so the cost model and the
+    live per-leaf dispatch can never disagree at the boundaries.
+    """
+    if param_bytes < 0:
+        raise ValueError(f"param_bytes must be >= 0, got {param_bytes}")
     if param_bytes < dense_threshold:
         return "dense"
     if param_bytes < trimmed_threshold:

@@ -20,7 +20,15 @@ from typing import Any
 import jax
 
 from . import registry
-from .cost_model import DENSE_THRESHOLD_BYTES, TRIMMED_THRESHOLD_BYTES
+from .cost_model import (DENSE_THRESHOLD_BYTES, TRIMMED_THRESHOLD_BYTES,
+                         choose_method)
+
+# cost-model method name -> registered compressor name
+_METHOD_COMPRESSOR = {
+    "dense": "dense",
+    "trimmed_topk": "trimmed_topk",
+    "threshold_binary_search": "threshold_bsearch",
+}
 
 
 def leaf_nbytes(x: jax.Array) -> int:
@@ -31,18 +39,20 @@ def leaf_nbytes(x: jax.Array) -> int:
 
 @dataclass(frozen=True)
 class SizeBasedPolicy:
-    """RedSync §5.5: choose the selector by leaf byte size."""
+    """RedSync §5.5: choose the selector by leaf byte size.
+
+    Delegates to ``cost_model.choose_method`` so the model and the live
+    dispatch share ONE definition of the (half-open) boundaries: exactly
+    128 KB → trimmed top-k, exactly 4 MB → binary search, 0 bytes → dense.
+    """
 
     dense_threshold_bytes: int = DENSE_THRESHOLD_BYTES
     trimmed_threshold_bytes: int = TRIMMED_THRESHOLD_BYTES
 
     def compressor_for(self, path: str, leaf: jax.Array) -> str:
-        nb = leaf_nbytes(leaf)
-        if nb < self.dense_threshold_bytes:
-            return "dense"
-        if nb < self.trimmed_threshold_bytes:
-            return "trimmed_topk"
-        return "threshold_bsearch"
+        method = choose_method(leaf_nbytes(leaf), self.dense_threshold_bytes,
+                               self.trimmed_threshold_bytes)
+        return _METHOD_COMPRESSOR[method]
 
 
 @dataclass(frozen=True)

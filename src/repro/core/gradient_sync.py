@@ -21,7 +21,16 @@ are local (un-averaged).
 ``optimizer`` accepts ``"rgc"`` (§5.5 size-based dispatch), ``"rgc_quant"``
 (same + §5.2.3 quantization), ``"dense"``, or ANY registered compressor
 spec — e.g. ``"threshold_bsearch"`` or ``"quantized(trimmed_topk)"`` —
-which routes every leaf through that compressor.
+which routes every leaf through that compressor. The spec may additionally
+prefix ``+``-joined DGC ``Correction`` names that run ahead of whatever
+compressor dispatch picks: ``"momentum+clip(threshold_bsearch)"`` is
+momentum correction → local clipping → Alg 3 selection on every leaf, and
+``"warmup(rgc)"`` ramps density over the §5.5 dispatch (see
+``repro.core.correction``). Spec corrections are additive: the
+``momentum`` / ``local_clip`` config fields stay the on/off switches for
+their corrections whether or not the spec names them, so legacy specs and
+``rgc_apply`` keep bitwise parity and ``"warmup(rgc)"`` is exactly
+``"rgc"`` plus the ramp.
 """
 from __future__ import annotations
 
@@ -33,11 +42,11 @@ import jax
 import jax.numpy as jnp
 
 from . import registry
-from .api import Compressor, DispatchPolicy, Transport
+from .api import Compressor, Correction, DispatchPolicy, Transport
 from .compressors import _Base as _CompressorBase  # noqa: F401 (registration)
+from .correction import LocalClip, MomentumCorrection, split_corrections
 from .dispatch import FixedPolicy, SizeBasedPolicy
-from .residual import LeafState, accumulate, local_clip_scale, \
-    mask_communicated
+from .residual import LeafState, accumulate, mask_communicated
 from .transport import FusedAllgather  # noqa: F401 (registration)
 
 
@@ -55,10 +64,26 @@ class GradientSync:
     quantize: bool = False
     no_quant_paths: tuple[str, ...] = ("lm_head", "embed")
     residual_dtype: Any = jnp.float32
+    # DGC corrections run ahead of any compressor, in order. Spec-named
+    # corrections land here explicitly; the momentum / local_clip config
+    # fields ALWAYS imply their corrections (those fields are the on/off
+    # switches — legacy semantics), appended unless the same name was
+    # already given, so e.g. "warmup(rgc)" keeps momentum correction on
+    # sparse leaves consistent with the dense-leaf momentum SGD.
+    corrections: tuple[Correction, ...] | None = None
     # parameter bag threaded to compressor factories (backend,
     # bsearch_interval, trim_eps, ...)
     compressor_params: dict = field(default_factory=dict)
     _compressors: dict = field(default_factory=dict, repr=False)
+
+    def __post_init__(self) -> None:
+        corr = list(self.corrections or ())
+        names = {c.name for c in corr}
+        if self.local_clip is not None and "local_clip" not in names:
+            corr.insert(0, LocalClip(self.local_clip))
+        if self.momentum and "momentum" not in names:
+            corr.append(MomentumCorrection(self.momentum, self.nesterov))
+        self.corrections = tuple(corr)
 
     # -- construction helpers ----------------------------------------------
 
@@ -81,6 +106,33 @@ class GradientSync:
             return self.compressor(f"quantized({name})")
         return self.compressor(name)
 
+    @property
+    def uses_momentum_buffer(self) -> bool:
+        """Whether leaf states carry a param-shaped velocity (vs scalar)."""
+        return bool(self.momentum) or any(
+            getattr(c, "needs_momentum_buffer", False)
+            for c in self.corrections)
+
+    def scheduled_density(self, step: int) -> float | None:
+        """Warm-up density at ``step`` from a schedule-owning correction
+        (``warmup``); None when no correction owns a schedule."""
+        for c in self.corrections:
+            d = c.density_at(step, self.density)
+            if d is not None:
+                return d
+        return None
+
+    def _accumulate(self, grad: jax.Array, param: jax.Array,
+                    state: LeafState) -> LeafState:
+        """Residual accumulation: first owning correction wins, else V += g."""
+        for c in self.corrections:
+            st = c.accumulate(grad, param, state,
+                              weight_decay=self.weight_decay)
+            if st is not None:
+                return st
+        return accumulate(grad, param, state, momentum=0.0, nesterov=False,
+                          weight_decay=self.weight_decay)
+
     # -- the transform ------------------------------------------------------
 
     def init(self, params: Any) -> Any:
@@ -97,7 +149,7 @@ class GradientSync:
         for path, p in zip(paths, leaves):
             name = self.policy.compressor_for(path, p)
             comp = self._leaf_compressor(name, path)
-            out.append(comp.init_leaf(p, momentum=bool(self.momentum),
+            out.append(comp.init_leaf(p, momentum=self.uses_momentum_buffer,
                                       residual_dtype=self.residual_dtype))
         return jax.tree.unflatten(treedef, out)
 
@@ -112,11 +164,9 @@ class GradientSync:
                  for kp, _ in jax.tree_util.tree_flatten_with_path(grads)[0]]
         n_workers = self.transport.num_workers()
 
-        # --- optional DGC local clipping (pre-accumulation, N^{-1/2}) ------
-        if self.local_clip is not None:
-            sq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves_g)
-            scale = local_clip_scale(sq, self.local_clip, n_workers)
-            leaves_g = [g * scale for g in leaves_g]
+        # --- tree-level corrections (e.g. DGC local clipping, N^{-1/2}) ----
+        for c in self.corrections:
+            leaves_g = c.on_grads(leaves_g, leaves_p, n_workers)
 
         # density == 1.0 sentinel: RedSync dense warm-up (§5.7)
         all_dense = density >= 1.0
@@ -138,15 +188,12 @@ class GradientSync:
         for i, comp, k in plan:
             if comp is None:
                 continue
-            st = accumulate(
-                leaves_g[i], leaves_p[i], leaves_s[i],
-                momentum=self.momentum, nesterov=self.nesterov,
-                weight_decay=self.weight_decay,
-            )
+            st = self._accumulate(leaves_g[i], leaves_p[i], leaves_s[i])
             flat_v = st.residual.reshape(-1).astype(jnp.float32)
             selected, st = comp.compress(flat_v, k, st)
-            st = mask_communicated(st, selected.indices,
-                                   momentum=bool(self.momentum))
+            st = mask_communicated(st, selected.indices, momentum=False)
+            for c in self.corrections:
+                st = c.on_communicated(st, selected.indices)
             new_states[i] = st
             messages.append(self.transport.pack(selected, comp.quantized))
             msg_meta.append((i, comp, k))
@@ -197,16 +244,40 @@ def build_gradient_sync(
     no_quant_paths: tuple[str, ...] = ("lm_head", "embed"),
     dense_threshold_bytes: int | None = None,
     trimmed_threshold_bytes: int | None = None,
+    warmup_steps_per_stage: int = 0,
+    dense_warmup: bool = False,
     **compressor_params: Any,
 ) -> GradientSync:
     """Build a ``GradientSync`` from string-addressable component names.
 
-    ``optimizer`` resolution:
+    ``optimizer`` may prefix ``+``-joined correction names (see
+    ``repro.core.correction``) ahead of a base spec, e.g.
+    ``"momentum+clip(threshold_bsearch)"`` or ``"warmup(rgc)"``; a
+    corrections-only spec defaults the base to ``"rgc"``. Base resolution:
       * ``"rgc"`` / ``"rgc_quant"`` — the paper's size-based dispatch
         (quantized variant wraps each non-dense compressor per §5.2.3);
       * ``"dense"`` — every leaf dense allreduce (baseline);
       * any registered compressor spec — fixed dispatch through it.
+
+    Spec-named corrections are ADDITIVE: the ``momentum`` / ``local_clip``
+    config fields remain the on/off switches for their corrections (legacy
+    semantics — so ``"warmup(rgc)"`` keeps momentum correction exactly as
+    ``"rgc"`` had it), and naming a correction already implied by a field
+    just fixes its position in the pipeline. Ablate by zeroing the field,
+    not by omitting the name.
     """
+    corr_names, base = split_corrections(optimizer)
+    optimizer = base or "rgc"
+    corrections: tuple[Correction, ...] | None = None
+    if corr_names:
+        corrections = tuple(
+            registry.make(registry.CORRECTION, name,
+                          momentum=momentum, nesterov=nesterov,
+                          local_clip=local_clip, density=density,
+                          warmup_steps_per_stage=warmup_steps_per_stage,
+                          dense_warmup=dense_warmup, **compressor_params)
+            for name in corr_names)
+
     policy_kw = {}
     if dense_threshold_bytes is not None:
         policy_kw["dense_threshold_bytes"] = dense_threshold_bytes
@@ -229,7 +300,9 @@ def build_gradient_sync(
         raise ValueError(
             f"unknown optimizer {optimizer!r}: expected rgc | rgc_quant | "
             f"dense | a registered compressor "
-            f"{registry.names(registry.COMPRESSOR)}")
+            f"{registry.names(registry.COMPRESSOR)}, optionally prefixed "
+            f"by '+'-joined corrections "
+            f"{registry.names(registry.CORRECTION)}")
 
     return GradientSync(
         policy=policy,
@@ -243,5 +316,6 @@ def build_gradient_sync(
         quantize=quantize,
         no_quant_paths=tuple(no_quant_paths),
         residual_dtype=residual_dtype,
+        corrections=corrections,
         compressor_params=dict(compressor_params),
     )

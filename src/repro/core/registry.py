@@ -1,8 +1,8 @@
 """String-addressable component registry for the compression API.
 
 Every pluggable piece of the gradient-sync pipeline — ``Compressor``,
-``Transport``, ``DispatchPolicy`` — registers a factory under a
-``(kind, name)`` key so configs can name components by string
+``Transport``, ``DispatchPolicy``, ``Correction`` — registers a factory
+under a ``(kind, name)`` key so configs can name components by string
 (``TrainConfig.optimizer = "threshold_bsearch"``) and extensions can add
 new ones without touching core code:
 
@@ -26,6 +26,7 @@ from typing import Any, Callable, Iterable
 COMPRESSOR = "compressor"
 TRANSPORT = "transport"
 DISPATCH_POLICY = "dispatch_policy"
+CORRECTION = "correction"
 
 _REGISTRY: dict[str, dict[str, Callable[..., Any]]] = {}
 

@@ -76,11 +76,21 @@ def mask_communicated(
     flat_v = state.residual.reshape(-1)
     v = flat_v.at[indices].set(0.0, mode="drop").reshape(state.residual.shape)
     if momentum:
-        flat_u = state.momentum.reshape(-1)
-        u = flat_u.at[indices].set(0.0, mode="drop").reshape(state.momentum.shape)
-    else:
-        u = state.momentum
-    return state._replace(residual=v, momentum=u)
+        return mask_momentum(state._replace(residual=v), indices)
+    return state._replace(residual=v)
+
+
+def mask_momentum(state: LeafState, indices: jax.Array) -> LeafState:
+    """DGC momentum factor masking: clear U at communicated coordinates.
+
+    No-op for leaves without a param-shaped velocity (``momentum=False``
+    init stores a scalar placeholder).
+    """
+    if getattr(state.momentum, "ndim", 0) == 0:
+        return state
+    flat_u = state.momentum.reshape(-1)
+    u = flat_u.at[indices].set(0.0, mode="drop").reshape(state.momentum.shape)
+    return state._replace(momentum=u)
 
 
 def local_clip_scale(grads_sq_sum: jax.Array, clip_norm: float,

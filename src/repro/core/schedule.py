@@ -8,6 +8,12 @@ saturates the dense bandwidth at p=64 (§5.7).
 
 Density is *static per compiled step* (message capacity is a trace-time
 shape), so the trainer recompiles at stage boundaries — 5 compilations total.
+
+Registry-addressable form: the ``warmup`` Correction
+(``core.correction.Warmup``) wraps a ``DensitySchedule`` so a spec like
+``"warmup+momentum+clip(threshold_bsearch)"`` carries the ramp with the
+optimizer; ``GradientSync.scheduled_density`` / ``Trainer.density_at``
+consult it ahead of the trainer-level schedule.
 """
 from __future__ import annotations
 

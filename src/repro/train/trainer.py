@@ -17,6 +17,15 @@ Structure of one step on a mesh with batch axes B = ("pod","data") (or
 
 ``optimizer="dense"`` gives the paper's baseline (allreduce data
 parallelism): same structure, density=1.0 sentinel -> every leaf dense.
+The optimizer spec may prefix DGC corrections
+("momentum+clip(threshold_bsearch)", see repro.core.correction) — they
+run inside GradientSync ahead of the compressor; a "warmup" correction
+owns the density schedule (Trainer.density_at defers to it).
+
+Pure data-parallel meshes (no "model" axis — the simulated-cluster
+harness, tests/harness/) take a single FULLY-manual shard_map over the
+batch axes: params replicated, batch sharded, gradients local. No nested
+partial-manual region, so this path also runs on legacy jax.
 
 Single-device smoke mode (mesh=None): same code path, sync_axes=(), no
 shard_map — used by CPU tests; the RGC algebra is identical with p=1.
@@ -91,6 +100,8 @@ def make_gradient_sync(tc: TrainConfig, mesh: Optional[Mesh]) -> GradientSync:
         weight_decay=tc.weight_decay,
         local_clip=tc.local_clip,
         residual_dtype=_residual_dtype(tc),
+        warmup_steps_per_stage=tc.warmup_steps_per_stage,
+        dense_warmup=tc.dense_warmup,
     )
 
 
@@ -128,9 +139,41 @@ def make_train_step(
         return jax.jit(step, donate_argnums=(0, 1) if donate else ())
 
     baxes = _batch_axes(mesh)
+
+    if "model" not in mesh.axis_names:
+        # Pure data-parallel mesh (the simulated-cluster harness): one
+        # FULLY-manual shard_map over the batch axes — params replicated,
+        # batch sharded, gradients local — with no nested partial-manual
+        # region, so it also runs on legacy jax (same pattern as the
+        # test_distributed "oracle" case).
+        bspec = P(baxes)
+        batch_struct = model.train_inputs(1, 1)   # keys only
+        batch_specs = {k: bspec for k in batch_struct}
+
+        def flat_step(params, rgc_state, batch, lr):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            new_params, new_state = sync.update(
+                grads, rgc_state, params, lr, density=dens)
+            return jax.lax.pmean(loss, baxes), new_params, new_state
+
+        stepped = shard_map_compat(
+            flat_step, mesh=mesh, axis_names=set(baxes),
+            in_specs=(P(), P(), batch_specs, P()),
+            out_specs=(P(), P(), P()),
+            check_vma=False,
+        )
+        rep = NamedSharding(mesh, P())
+        shardings_b = {k: NamedSharding(mesh, bspec) for k in batch_struct}
+        return jax.jit(
+            stepped,
+            in_shardings=(rep, rep, shardings_b, rep),
+            out_shardings=(rep, rep, rep),
+            donate_argnums=(0, 1) if donate else (),
+        )
+
     pspecs = param_specs(defs, pc, mesh)
     sspecs = jax.tree.map(
-        lambda s: _leaf_state_specs(s, bool(tc.momentum)), pspecs,
+        lambda s: _leaf_state_specs(s, sync.uses_momentum_buffer), pspecs,
         is_leaf=lambda x: isinstance(x, P))
     bspec = P(baxes)     # shard dim 0 over all batch axes
 
@@ -257,15 +300,27 @@ class Trainer:
             target=tc.density,
             warmup_steps_per_stage=tc.warmup_steps_per_stage,
             dense_warmup=tc.dense_warmup)
+        self._sync = make_gradient_sync(tc, mesh)
         self._steps: dict[float, Callable] = {}
 
     def init_state(self, seed: Optional[int] = None) -> TrainState:
         params = self.model.init_params(
             self.tc.seed if seed is None else seed)
-        sync = make_gradient_sync(self.tc, self.mesh)
-        return TrainState(params=params, rgc=sync.init(params), step=0)
+        return TrainState(params=params, rgc=self._sync.init(params), step=0)
+
+    def density_at(self, step: int) -> float:
+        """Density for this step: a ``warmup`` correction in the optimizer
+        spec owns the schedule when present; otherwise the TrainConfig's
+        warm-up fields drive the trainer-level DensitySchedule."""
+        d = self._sync.scheduled_density(step)
+        return self.schedule.density_at(step) if d is None else d
 
     def _step_fn(self, density: float) -> Callable:
+        # "dense" compiles the same step at every density (make_train_step
+        # pins dens=1.0): key the cache on the EFFECTIVE density so a
+        # warm-up schedule doesn't trigger redundant recompiles
+        if self.tc.optimizer == "dense":
+            density = 1.0
         if density not in self._steps:
             self._steps[density] = make_train_step(
                 self.model, self.mesh, self.pc, self.tc, density=density,
@@ -273,15 +328,21 @@ class Trainer:
         return self._steps[density]
 
     def run(self, state: TrainState, batches, num_steps: int,
-            log_every: int = 10, log_fn=print) -> TrainState:
+            log_every: int = 10, log_fn=print,
+            on_metrics: Optional[Callable[[int, float, float], None]] = None
+            ) -> TrainState:
+        """``on_metrics(step, density, loss)`` fires every step (forces a
+        per-step device sync — metrics/convergence harness use)."""
         it = iter(batches)
         for _ in range(num_steps):
             batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-            density = self.schedule.density_at(state.step)
+            density = self.density_at(state.step)
             fn = self._step_fn(density)
             loss, params, rgc_state = fn(
                 state.params, state.rgc, batch, jnp.float32(self.tc.lr))
             state = TrainState(params, rgc_state, state.step + 1)
+            if on_metrics is not None:
+                on_metrics(state.step, density, float(loss))
             if log_every and state.step % log_every == 0:
                 log_fn(f"step {state.step:5d}  density {density:.4%}  "
                        f"loss {float(loss):.4f}")

@@ -10,10 +10,11 @@ Checks, on a (4 data x 2 model) mesh:
     equals an oracle computed from each worker's local top-k.
  3. quantized + momentum variants run and stay finite.
 """
-import os
 import sys
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from harness.cluster import check, force_host_devices
+
+force_host_devices(8)
 
 import jax
 import jax.numpy as jnp
@@ -26,12 +27,6 @@ from repro.data import bigram_batches
 from repro.launch.mesh import make_host_mesh
 from repro.train.trainer import Trainer, make_rgc_config, make_train_step
 from repro.models.registry import get_model
-
-
-def check(name, cond):
-    print(("PASS" if cond else "FAIL"), name)
-    if not cond:
-        sys.exit(1)
 
 
 def test_dense_equivalence():

@@ -2,11 +2,9 @@
 XLA device-count flag). Lowers + compiles the REAL dryrun code paths
 (train RGC step, prefill, decode) for smoke configs on a 4x2 mesh and
 checks cost/collective extraction works end to end."""
-import os
+from harness.cluster import force_host_devices
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-
-import sys
+force_host_devices(8)
 
 import jax
 import jax.numpy as jnp

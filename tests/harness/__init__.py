@@ -1,0 +1,24 @@
+"""Simulated-cluster harness: an N-way worker mesh on forced host devices.
+
+Entry points (see ``cluster.py``):
+
+* ``force_host_devices(n)`` — set the XLA flag that splits the host CPU
+  into ``n`` devices (must run before jax initializes).
+* ``make_data_mesh()`` — 1-D ``("data",)`` mesh over every visible device;
+  the trainer takes its fully-manual pure-data-parallel path on it.
+* ``train_and_eval(...)`` — a real short training run through
+  ``repro.train.trainer.Trainer`` on that mesh + held-out loss.
+* ``run_cluster(spec)`` — the subprocess driver (device forcing must
+  happen before jax init, so multi-device runs go through
+  ``_cluster_prog.py`` in a child process).
+* ``convergence_pair(...)`` — sparse-with-corrections vs dense baseline
+  on the same mesh/budget; what the tier-2 tests and
+  ``benchmarks/tab1_convergence.py`` consume.
+"""
+from .cluster import (CLUSTER_PROG, check, convergence_pair,
+                      force_host_devices, make_data_mesh, run_cluster,
+                      subprocess_env, train_and_eval)
+
+__all__ = ["CLUSTER_PROG", "check", "convergence_pair",
+           "force_host_devices", "make_data_mesh", "run_cluster",
+           "subprocess_env", "train_and_eval"]

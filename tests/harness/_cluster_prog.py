@@ -1,0 +1,29 @@
+"""Subprocess entry point for the simulated-cluster harness.
+
+Usage: ``python _cluster_prog.py '<json>'`` where the JSON is
+``{"devices": N, "run": {train_and_eval kwargs}}``. Forces N host devices
+BEFORE jax initializes, runs the training loop on the ``("data",)`` mesh,
+and prints ``RESULT <json>`` for the parent (``cluster.run_cluster``).
+"""
+import json
+import sys
+
+from harness.cluster import check, force_host_devices, train_and_eval
+
+
+def main() -> None:
+    spec = json.loads(sys.argv[1])
+    force_host_devices(spec.get("devices", 8))
+
+    import jax  # first jax touch happens after the flag is set
+    n = len(jax.devices())
+    check(f"forced {spec.get('devices', 8)} host devices (got {n})",
+          n == spec.get("devices", 8))
+
+    out = train_and_eval(**spec["run"])
+    print("RESULT " + json.dumps(out))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Simulated-cluster machinery (no jax import at module scope).
+
+The harness splits one host CPU into N XLA devices
+(``--xla_force_host_platform_device_count``), builds a pure data-parallel
+``("data",)`` mesh over them, and drives real training loops through
+``repro.train.trainer.Trainer`` — the trainer's fully-manual shard_map
+path, which runs on both legacy (0.4.x) and modern jax. Each worker sees
+its own batch shard and computes LOCAL gradients, so the residual /
+correction / selection / allgather pipeline is exercised exactly as on a
+real cluster (p = N in Eq 1), just without the wire.
+
+Device forcing must happen before jax initializes, so multi-device runs
+from an already-jax-initialized process (pytest, benchmarks) go through
+``run_cluster`` → ``_cluster_prog.py`` in a subprocess; in-process use
+(``train_and_eval``) is for programs that called ``force_host_devices``
+first.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Any
+
+TESTS_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+REPO_ROOT = os.path.dirname(TESTS_DIR)
+SRC_DIR = os.path.join(REPO_ROOT, "src")
+CLUSTER_PROG = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "_cluster_prog.py")
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int = 8) -> None:
+    """Split the host platform into ``n`` XLA devices.
+
+    Only effective before jax initializes its backends — call it at the
+    top of a standalone program, before any jax import.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FORCE_FLAG in flags:
+        flags = " ".join(f for f in flags.split()
+                         if not f.startswith(_FORCE_FLAG))
+    os.environ["XLA_FLAGS"] = f"{flags} {_FORCE_FLAG}={n}".strip()
+
+
+def check(name: str, cond: bool) -> None:
+    """Subprocess-program assertion: PASS/FAIL line + nonzero exit."""
+    print(("PASS" if cond else "FAIL"), name)
+    if not cond:
+        sys.exit(1)
+
+
+def subprocess_env(extra: dict[str, str] | None = None) -> dict[str, str]:
+    """Environment for harness/test subprocesses: repo src + tests on path."""
+    env = dict(os.environ)
+    path = [SRC_DIR, TESTS_DIR]
+    if env.get("PYTHONPATH"):
+        path.append(env["PYTHONPATH"])
+    env["PYTHONPATH"] = os.pathsep.join(path)
+    env.update(extra or {})
+    return env
+
+
+def make_data_mesh(num_devices: int | None = None):
+    """1-D ``("data",)`` mesh over the (forced) host devices."""
+    import jax
+
+    from repro.launch.mesh import _make_mesh
+    n = len(jax.devices()) if num_devices is None else num_devices
+    return _make_mesh((n,), ("data",))
+
+
+def train_and_eval(
+    arch: str,
+    optimizer: str,
+    steps: int,
+    *,
+    transport: str = "fused_allgather",
+    lr: float = 0.1,
+    momentum: float = 0.9,
+    density: float = 0.01,
+    local_clip: float | None = None,
+    warmup_steps_per_stage: int = 0,
+    dense_warmup: bool = False,
+    seed: int = 0,
+    batch: int = 8,
+    seq_len: int = 64,
+    eval_batches: int = 4,
+    log_every: int = 0,
+    use_mesh: bool = True,
+) -> dict[str, Any]:
+    """One real training run on the simulated cluster + held-out loss.
+
+    Returns ``{"held_loss", "losses", "num_devices", "steps"}``; ``losses``
+    is the per-step training-loss trace (loss is pmean'd over workers
+    inside the step, so it is the global-batch loss).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import TrainConfig, get_config
+    from repro.data import bigram_batches
+    from repro.train.trainer import Trainer
+
+    cfg = get_config(arch, smoke=True)
+    tc = TrainConfig(lr=lr, momentum=momentum, optimizer=optimizer,
+                     transport=transport, density=density,
+                     local_clip=local_clip,
+                     warmup_steps_per_stage=warmup_steps_per_stage,
+                     dense_warmup=dense_warmup, seed=seed)
+    mesh = make_data_mesh() if use_mesh else None
+    tr = Trainer(cfg, tc, mesh=mesh)
+    state = tr.init_state()
+
+    losses: list[float] = []
+    state = tr.run(state, bigram_batches(cfg.vocab_size, batch, seq_len,
+                                         seed=seed),
+                   steps, log_every=log_every,
+                   on_metrics=lambda step, dens, loss: losses.append(loss))
+
+    # held-out loss: fresh batches from the same chain, past the train span
+    src = bigram_batches(cfg.vocab_size, batch, seq_len, seed=seed)
+    for _ in range(steps):
+        next(src)
+    held = 0.0
+    for _ in range(eval_batches):
+        b = {k: jnp.asarray(v) for k, v in next(src).items()}
+        held += float(tr.model.loss(state.params, b))
+    return {
+        "held_loss": held / eval_batches,
+        "losses": losses,
+        "num_devices": len(jax.devices()) if use_mesh else 1,
+        "steps": state.step,
+    }
+
+
+def run_cluster(spec: dict[str, Any], *, devices: int = 8,
+                timeout: int = 1200) -> dict[str, Any]:
+    """Run ``train_and_eval(**spec)`` on ``devices`` forced host devices in
+    a subprocess; returns its result dict."""
+    proc = subprocess.run(
+        [sys.executable, CLUSTER_PROG,
+         json.dumps({"devices": devices, "run": spec})],
+        capture_output=True, text=True, env=subprocess_env(),
+        timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"cluster run failed ({spec.get('arch')}/"
+            f"{spec.get('optimizer')}):\nSTDOUT:\n{proc.stdout[-3000:]}\n"
+            f"STDERR:\n{proc.stderr[-3000:]}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"no RESULT line in cluster output:\n{proc.stdout}")
+
+
+def convergence_pair(
+    arch: str,
+    steps: int = 200,
+    *,
+    devices: int = 8,
+    sparse_optimizer: str = "momentum+clip(threshold_bsearch)",
+    density: float = 0.01,
+    warmup_steps_per_stage: int = 25,
+    dense_warmup: bool = False,
+    lr: float = 0.1,
+    momentum: float = 0.9,
+    local_clip: float = 1.0,
+    seed: int = 0,
+    timeout: int = 1200,
+) -> dict[str, Any]:
+    """Sparse-with-corrections vs dense ``psum`` on the same mesh/budget.
+
+    The tier-2 convergence-parity criterion: the corrected sparse run's
+    held-out loss lands within tolerance of the dense baseline's. The
+    dense baseline gets the SAME local clipping (DGC clips both sides of
+    its comparisons; an unclipped baseline would measure the clip, not
+    the sparsification).
+    """
+    common = dict(arch=arch, steps=steps, lr=lr, momentum=momentum,
+                  local_clip=local_clip, seed=seed)
+    dense = run_cluster(dict(common, optimizer="dense",
+                             transport="dense_psum"),
+                        devices=devices, timeout=timeout)
+    sparse = run_cluster(dict(common, optimizer=sparse_optimizer,
+                              density=density, local_clip=local_clip,
+                              warmup_steps_per_stage=warmup_steps_per_stage,
+                              dense_warmup=dense_warmup),
+                         devices=devices, timeout=timeout)
+    return {"dense": dense, "sparse": sparse,
+            "dense_loss": dense["held_loss"],
+            "sparse_loss": sparse["held_loss"]}

@@ -1,0 +1,132 @@
+"""Deterministic invariants for EVERY registered compressor.
+
+The same invariants are stressed with randomized shapes under hypothesis
+in tests/test_property.py (skipped where hypothesis isn't installed);
+this file pins them on a fixed grid so every environment runs them:
+
+  * exact mass conservation — ``decompress(msg) + residual == grad``
+    bitwise per-coordinate for non-quantized selectors (the communicated
+    coordinates carry the exact residual values; the rest stays);
+    sum-conservation within fp tolerance for quantized ones.
+  * ``count <= capacity`` and index validity/padding.
+  * bf16/f32 residual + param dtype preservation through the pipeline.
+  * determinism under ``jit`` (two jitted calls and eager agree bitwise).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.gradient_sync import build_gradient_sync
+from repro.core.residual import mask_communicated
+
+SIZES = [(64, 3), (512, 16), (1000, 7)]
+
+
+def _selecting_names():
+    return sorted(n for n in registry.names(registry.COMPRESSOR)
+                  if n != "dense")
+
+
+def _vec(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+
+def _compress_roundtrip(comp, x, k):
+    tr = registry.make(registry.TRANSPORT, "fused_allgather", sync_axes=())
+    st = comp.init_leaf(x, momentum=False)
+    st = st._replace(residual=x)
+    sel, st = comp.compress(x, k, st)
+    st = mask_communicated(st, sel.indices, momentum=False)
+    (gathered,) = tr.allgather([tr.pack(sel, comp.quantized)])
+    dense = comp.decompress(gathered, x.size, k)
+    return sel, st.residual, dense
+
+
+@pytest.mark.parametrize("name", _selecting_names())
+@pytest.mark.parametrize("n,k", SIZES)
+def test_mass_conservation(name, n, k):
+    comp = registry.make(registry.COMPRESSOR, name)
+    x = _vec(n, seed=n + k)
+    sel, residual, dense = _compress_roundtrip(comp, x, k)
+    if comp.quantized:
+        # quantized messages carry one shared magnitude: per-coordinate
+        # exactness is lost, total communicated mass is conserved
+        np.testing.assert_allclose(
+            float(jnp.sum(dense)),
+            float(jnp.sum(sel.values)), rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(
+            np.asarray(residual + dense), np.asarray(x),
+            err_msg=f"{name}: residual + decompressed != grad")
+
+
+@pytest.mark.parametrize("name", _selecting_names())
+@pytest.mark.parametrize("n,k", SIZES)
+def test_count_capacity_and_padding(name, n, k):
+    comp = registry.make(registry.COMPRESSOR, name)
+    x = _vec(n, seed=n * 31 + k)
+    sel, _, _ = _compress_roundtrip(comp, x, k)
+    cap = comp.capacity(k)
+    cnt = int(sel.count)
+    idx = np.asarray(sel.indices)
+    assert 1 <= cnt <= cap
+    assert idx.shape == (cap,)
+    assert np.all((idx[:cnt] >= 0) & (idx[:cnt] < n))
+    assert np.all(idx[cnt:] == n)          # padding carries the sentinel
+
+
+@pytest.mark.parametrize("name", _selecting_names())
+@pytest.mark.parametrize("residual_dtype", [jnp.float32, jnp.bfloat16])
+def test_leaf_state_dtype_preserved(name, residual_dtype):
+    comp = registry.make(registry.COMPRESSOR, name)
+    x = _vec(256, seed=11)
+    st = comp.init_leaf(x, momentum=True, residual_dtype=residual_dtype)
+    assert st.residual.dtype == residual_dtype
+    sel, st2 = comp.compress(st.residual.astype(jnp.float32), 8, st)
+    st2 = mask_communicated(st2, sel.indices, momentum=True)
+    assert st2.residual.dtype == residual_dtype
+    assert st2.momentum.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("param_dtype", [jnp.float32, jnp.bfloat16])
+def test_gradient_sync_preserves_param_dtype(param_dtype):
+    sync = build_gradient_sync("threshold_bsearch", density=0.02)
+    params = {"w": _vec(400, seed=1).astype(param_dtype),
+              "b": _vec(8, seed=2).astype(param_dtype)}
+    grads = {"w": _vec(400, seed=3).astype(param_dtype),
+             "b": _vec(8, seed=4).astype(param_dtype)}
+    st = sync.init(params)
+    new_p, new_s = sync.update(grads, st, params, jnp.float32(0.1))
+    for key in params:
+        assert new_p[key].dtype == param_dtype
+        assert np.isfinite(np.asarray(new_p[key], np.float32)).all()
+
+
+@pytest.mark.parametrize("name", _selecting_names())
+def test_deterministic_under_jit(name):
+    comp = registry.make(registry.COMPRESSOR, name)
+    n, k = 600, 9
+    x = _vec(n, seed=77)
+    st0 = comp.init_leaf(x, momentum=False)
+
+    def f(v, st):
+        sel, st2 = comp.compress(v, k, st)
+        return sel.indices, sel.values, sel.count, st2
+
+    jitted = jax.jit(f)
+    a, b = jitted(x, st0), jitted(x, st0)
+    eager = f(x, st0)
+    for got1, got2, ref in zip(a[:3], b[:3], eager[:3]):
+        np.testing.assert_array_equal(np.asarray(got1), np.asarray(got2))
+        np.testing.assert_array_equal(np.asarray(got1), np.asarray(ref))
+
+
+def test_dense_compressor_never_compresses():
+    """'dense' is the allreduce sentinel: compress is a contract error."""
+    comp = registry.make(registry.COMPRESSOR, "dense")
+    assert comp.capacity(8) == 0
+    with pytest.raises(NotImplementedError):
+        comp.compress(_vec(16), 4, comp.init_leaf(_vec(16), momentum=False))

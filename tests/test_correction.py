@@ -1,0 +1,245 @@
+"""The Correction protocol: registry round-trip, spec grammar, hook
+semantics, and equivalence of the explicit correction pipeline with the
+legacy config-field-driven one (which test_api.py already holds bitwise
+to the frozen monolith)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.api import Correction
+from repro.core.correction import (FactorMasking, LocalClip,
+                                   MomentumCorrection, Warmup,
+                                   split_corrections)
+from repro.core.gradient_sync import build_gradient_sync
+from repro.core.residual import init_leaf, local_clip_scale, \
+    mask_communicated
+
+CORRECTIONS = ["momentum", "factor_masking", "local_clip", "warmup"]
+
+
+def _grads(shapes, seed=0):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for k, s in shapes.items()}
+
+
+# ---------------------------------------------------------------------------
+# registry + grammar
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_every_correction_constructible_by_name(self):
+        names = registry.names(registry.CORRECTION)
+        assert set(CORRECTIONS) <= set(names)
+        for name in names:
+            corr = registry.make(registry.CORRECTION, name)
+            assert isinstance(corr, Correction)   # structural check
+
+    def test_aliases(self):
+        assert isinstance(registry.make(registry.CORRECTION, "clip"),
+                          LocalClip)
+        assert isinstance(registry.make(registry.CORRECTION, "masking"),
+                          FactorMasking)
+
+    def test_params_threaded(self):
+        m = registry.make(registry.CORRECTION, "momentum", momentum=0.7,
+                          nesterov=True, unrelated=1)
+        assert m.momentum == 0.7 and m.nesterov
+        c = registry.make(registry.CORRECTION, "clip", local_clip=2.5)
+        assert c.clip_norm == 2.5
+
+
+class TestSpecGrammar:
+    @pytest.mark.parametrize("spec,corr,base", [
+        ("rgc", [], "rgc"),
+        ("quantized(trimmed_topk)", [], "quantized(trimmed_topk)"),
+        ("momentum", ["momentum"], ""),
+        ("momentum+clip(threshold_bsearch)", ["momentum", "clip"],
+         "threshold_bsearch"),
+        ("momentum+clip+threshold_bsearch", ["momentum", "clip"],
+         "threshold_bsearch"),
+        ("momentum(clip(threshold_bsearch))", ["momentum", "clip"],
+         "threshold_bsearch"),
+        ("warmup(rgc)", ["warmup"], "rgc"),
+        ("warmup+momentum+clip(dense)", ["warmup", "momentum", "clip"],
+         "dense"),
+        ("momentum(quantized(trimmed_topk))", ["momentum"],
+         "quantized(trimmed_topk)"),
+    ])
+    def test_split(self, spec, corr, base):
+        assert split_corrections(spec) == (corr, base)
+
+    @pytest.mark.parametrize("bad", [
+        "nope+momentum",                 # non-correction before the base
+        "clip(threshold_bsearch)+warmup",  # paren correction must be last
+        "momentum+nope+rgc",
+    ])
+    def test_bad_specs_raise(self, bad):
+        with pytest.raises(ValueError):
+            split_corrections(bad)
+
+    def test_build_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            build_gradient_sync("momentum+nope")
+        with pytest.raises(ValueError):
+            build_gradient_sync("nope")
+
+
+# ---------------------------------------------------------------------------
+# hook semantics
+# ---------------------------------------------------------------------------
+
+class TestHooks:
+    def test_momentum_correction_masks_own_velocity(self):
+        """Velocity accumulates, and clears at communicated coords — the
+        same semantics legacy mask_communicated(momentum=True) had."""
+        p = jnp.zeros((6,))
+        corr = MomentumCorrection(0.5)
+        st = init_leaf(p, momentum=True)
+        st = corr.accumulate(jnp.ones((6,)), p, st, weight_decay=0.0)
+        np.testing.assert_allclose(st.momentum, 1.0)
+        np.testing.assert_allclose(st.residual, 1.0)
+        idx = jnp.asarray([0, 3, 6])       # 6 == size: padding sentinel
+        legacy = mask_communicated(st, idx, momentum=True)
+        new = mask_communicated(st, idx, momentum=False)
+        new = corr.on_communicated(new, idx)
+        np.testing.assert_array_equal(np.asarray(legacy.residual),
+                                      np.asarray(new.residual))
+        np.testing.assert_array_equal(np.asarray(legacy.momentum),
+                                      np.asarray(new.momentum))
+        assert float(new.momentum[0]) == 0 and float(new.momentum[1]) == 1
+
+    def test_factor_masking_noop_on_scalar_velocity(self):
+        st = init_leaf(jnp.zeros((4,)), momentum=False)
+        out = FactorMasking().on_communicated(st, jnp.asarray([0, 1]))
+        assert out.momentum.shape == ()     # untouched scalar placeholder
+
+    def test_local_clip_matches_reference_formula(self):
+        grads = list(_grads({"a": (32,), "b": (7,)}).values())
+        clip = LocalClip(1.0)
+        out = clip.on_grads(grads, grads, num_workers=4)
+        sq = sum(float(jnp.sum(g ** 2)) for g in grads)
+        scale = float(local_clip_scale(jnp.float32(sq), 1.0, 4))
+        for g, o in zip(grads, out):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(g) * scale,
+                                       rtol=1e-6)
+
+    def test_warmup_owns_schedule(self):
+        w = registry.make(registry.CORRECTION, "warmup", density=0.01,
+                          warmup_steps_per_stage=5, dense_warmup=True)
+        assert w.density_at(0, 0.01) == 1.0
+        assert w.density_at(19, 0.01) == 1.0
+        assert w.density_at(20, 0.01) == 0.01
+
+    def test_warmup_defaults_to_real_ramp_when_unset(self):
+        """A spec that NAMES warmup gets an actual ramp even when the
+        config leaves warmup_steps_per_stage at 0."""
+        w = registry.make(registry.CORRECTION, "warmup", density=0.001)
+        assert w.density_at(0, 0.001) == 0.25
+        assert w.schedule.warmup_steps_per_stage == \
+            Warmup.DEFAULT_STEPS_PER_STAGE
+
+
+# ---------------------------------------------------------------------------
+# GradientSync integration
+# ---------------------------------------------------------------------------
+
+class TestGradientSyncIntegration:
+    SHAPES = {"w": (400, 50), "b": (16,)}
+
+    def test_explicit_spec_matches_implicit_fields_bitwise(self):
+        """"momentum+clip(threshold_bsearch)" == "threshold_bsearch" with
+        the momentum/local_clip config fields — the corrections ARE the
+        legacy behavior, made addressable."""
+        kw = dict(density=0.02, momentum=0.9, nesterov=True,
+                  local_clip=1.0, weight_decay=1e-4,
+                  dense_threshold_bytes=32)
+        explicit = build_gradient_sync("momentum+clip(threshold_bsearch)",
+                                       **kw)
+        implicit = build_gradient_sync("threshold_bsearch", **kw)
+        params = _grads(self.SHAPES, seed=1)
+        se, si = explicit.init(params), implicit.init(params)
+        pe = pi = params
+        for step in range(3):
+            g = _grads(self.SHAPES, seed=10 + step)
+            pe, se = explicit.update(g, se, pe, jnp.float32(0.1))
+            pi, si = implicit.update(g, si, pi, jnp.float32(0.1))
+        for a, b in zip(jax.tree.leaves((pe, se)), jax.tree.leaves((pi, si))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_spec_corrections_are_additive_with_config_fields(self):
+        """The momentum/local_clip FIELDS are the on/off switches: a spec
+        naming only 'clip' still gets momentum correction from
+        momentum=0.9 (sparse leaves must stay consistent with the
+        dense-leaf momentum SGD the same field drives); ablation is
+        momentum=0.0, not omission."""
+        sync = build_gradient_sync("clip(threshold_bsearch)", momentum=0.9,
+                                   local_clip=1.0)
+        assert [c.name for c in sync.corrections] == ["local_clip",
+                                                      "momentum"]
+        ablated = build_gradient_sync("clip(threshold_bsearch)",
+                                      momentum=0.0, local_clip=1.0)
+        assert [c.name for c in ablated.corrections] == ["local_clip"]
+
+    def test_warmup_spec_keeps_momentum_correction(self):
+        """"warmup(rgc)" == "rgc" + the density ramp — switching the spec
+        must not silently drop momentum correction on sparse leaves."""
+        plain = build_gradient_sync("rgc", momentum=0.9, local_clip=1.0)
+        ramped = build_gradient_sync("warmup(rgc)", momentum=0.9,
+                                     local_clip=1.0, density=0.02,
+                                     warmup_steps_per_stage=2)
+        assert ({c.name for c in plain.corrections} ==
+                {c.name for c in ramped.corrections} - {"warmup"})
+        params = _grads(self.SHAPES, seed=2)
+        sp, sr = plain.init(params), ramped.init(params)
+        pp = pr = params
+        for step in range(2):   # identical at equal density
+            g = _grads(self.SHAPES, seed=20 + step)
+            pp, sp = plain.update(g, sp, pp, jnp.float32(0.1), density=0.02)
+            pr, sr = ramped.update(g, sr, pr, jnp.float32(0.1), density=0.02)
+        for a, b in zip(jax.tree.leaves((pp, sp)), jax.tree.leaves((pr, sr))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_corrections_only_spec_defaults_to_rgc(self):
+        sync = build_gradient_sync("momentum+clip", local_clip=1.0)
+        assert [c.name for c in sync.corrections] == ["momentum",
+                                                      "local_clip"]
+        assert type(sync.policy).__name__ == "SizeBasedPolicy"
+
+    def test_scheduled_density(self):
+        sync = build_gradient_sync("warmup+momentum(rgc)", density=0.01,
+                                   warmup_steps_per_stage=2,
+                                   dense_warmup=True)
+        assert sync.scheduled_density(0) == 1.0
+        assert sync.scheduled_density(8) == 0.01
+        nosched = build_gradient_sync("rgc")
+        assert nosched.scheduled_density(0) is None
+
+    def test_warmup_spec_drives_trainer_schedule(self):
+        from repro.configs import TrainConfig, get_config
+        from repro.train.trainer import Trainer
+        cfg = get_config("internlm2-1.8b", smoke=True)
+        tc = TrainConfig(optimizer="warmup+momentum+clip(threshold_bsearch)",
+                         density=0.01, local_clip=1.0,
+                         warmup_steps_per_stage=2, dense_warmup=True)
+        tr = Trainer(cfg, tc)
+        assert tr.density_at(0) == 1.0
+        assert tr.density_at(7) == 1.0
+        assert tr.density_at(8) == 0.01
+
+    def test_momentum_spec_trains_finite(self):
+        from repro.configs import TrainConfig, get_config
+        from repro.data import bigram_batches
+        from repro.train.trainer import Trainer
+        cfg = get_config("internlm2-1.8b", smoke=True)
+        tc = TrainConfig(lr=0.1, momentum=0.9, local_clip=1.0, density=0.02,
+                         optimizer="momentum+clip(threshold_bsearch)")
+        tr = Trainer(cfg, tc)
+        state = tr.run(tr.init_state(),
+                       bigram_batches(cfg.vocab_size, 2, 32, seed=0),
+                       3, log_every=0)
+        assert state.step == 3
+        for leaf in jax.tree.leaves(state.params):
+            assert np.isfinite(np.asarray(leaf, np.float32)).all()

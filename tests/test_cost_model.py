@@ -1,0 +1,70 @@
+"""Boundary pinning for the §5.5 dispatch (cost_model.choose_method and
+SizeBasedPolicy must agree, including AT the 128 KB / 4 MB boundaries and
+for degenerate 0-byte leaves)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cost_model import (DENSE_THRESHOLD_BYTES,
+                                   TRIMMED_THRESHOLD_BYTES, choose_method)
+from repro.core.dispatch import SizeBasedPolicy, _METHOD_COMPRESSOR
+
+
+def _leaf(nbytes: int, dtype=jnp.int8) -> jax.ShapeDtypeStruct:
+    assert nbytes % jnp.dtype(dtype).itemsize == 0
+    return jax.ShapeDtypeStruct((nbytes // jnp.dtype(dtype).itemsize,),
+                                dtype)
+
+
+class TestChooseMethodBoundaries:
+    """The boundaries are PINNED half-open: [0,128K) dense, [128K,4M)
+    trimmed, [4M,inf) bsearch — "smaller than 128 KB" means exactly 128 KB
+    is already sparsified."""
+
+    @pytest.mark.parametrize("nbytes,expect", [
+        (0, "dense"),                                   # 0-byte leaf
+        (1, "dense"),
+        (DENSE_THRESHOLD_BYTES - 1, "dense"),
+        (DENSE_THRESHOLD_BYTES, "trimmed_topk"),        # exactly 128 KB
+        (DENSE_THRESHOLD_BYTES + 1, "trimmed_topk"),
+        (TRIMMED_THRESHOLD_BYTES - 1, "trimmed_topk"),
+        (TRIMMED_THRESHOLD_BYTES, "threshold_binary_search"),  # exactly 4 MB
+        (TRIMMED_THRESHOLD_BYTES + 1, "threshold_binary_search"),
+    ])
+    def test_pinned(self, nbytes, expect):
+        assert choose_method(nbytes) == expect
+
+    def test_negative_bytes_raise(self):
+        with pytest.raises(ValueError):
+            choose_method(-1)
+
+    def test_custom_thresholds_stay_half_open(self):
+        assert choose_method(1024, 1024, 4096) == "trimmed_topk"
+        assert choose_method(4096, 1024, 4096) == "threshold_binary_search"
+        assert choose_method(1023, 1024, 4096) == "dense"
+
+
+class TestSizeBasedPolicyAgreesWithCostModel:
+    def test_boundary_leaves(self):
+        """Real leaves landing EXACTLY on the boundaries (via dtype choice:
+        32768 f32 = 128 KB; 2M bf16 = 4 MB)."""
+        pol = SizeBasedPolicy()
+        exactly_128k = jax.ShapeDtypeStruct((32 * 1024,), jnp.float32)
+        exactly_4m = jax.ShapeDtypeStruct((2 * 1024 * 1024,), jnp.bfloat16)
+        assert pol.compressor_for("", exactly_128k) == "trimmed_topk"
+        assert pol.compressor_for("", exactly_4m) == "threshold_bsearch"
+
+    def test_zero_size_leaf_is_dense(self):
+        pol = SizeBasedPolicy()
+        assert pol.compressor_for("", jnp.zeros((0,), jnp.float32)) == "dense"
+
+    @pytest.mark.parametrize("nbytes", [
+        0, 1, 64, DENSE_THRESHOLD_BYTES - 1, DENSE_THRESHOLD_BYTES,
+        DENSE_THRESHOLD_BYTES + 1, 1024 * 1024, TRIMMED_THRESHOLD_BYTES - 1,
+        TRIMMED_THRESHOLD_BYTES, TRIMMED_THRESHOLD_BYTES + 1,
+        64 * 1024 * 1024])
+    def test_delegation_consistency(self, nbytes):
+        """SizeBasedPolicy is exactly choose_method ∘ leaf_nbytes."""
+        pol = SizeBasedPolicy()
+        assert pol.compressor_for("", _leaf(nbytes)) == \
+            _METHOD_COMPRESSOR[choose_method(nbytes)]

@@ -1,12 +1,9 @@
 """Multi-device distribution tests.
 
-These need XLA_FLAGS=--xla_force_host_platform_device_count=8, which must be
-set before jax initializes — so each case runs tests/_dist_prog.py in a
-subprocess (the main pytest process keeps its single-device view, per the
-project rule of never forcing device counts globally)."""
+These need XLA_FLAGS=--xla_force_host_platform_device_count=8, which must
+be set before jax initializes — so each case runs tests/_dist_prog.py in a
+subprocess through the shared ``run_prog`` fixture (tests/conftest.py)."""
 import os
-import subprocess
-import sys
 
 import jax
 import pytest
@@ -23,25 +20,11 @@ _legacy_jax = pytest.mark.skipif(
     reason="nested partial-manual shard_map requires modern jax/XLA")
 
 
-def _run(case: str) -> None:
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
-    proc = subprocess.run([sys.executable, _PROG, case],
-                          capture_output=True, text=True, env=env,
-                          timeout=900)
-    if proc.returncode != 0:
-        raise AssertionError(
-            f"{case} failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n"
-            f"{proc.stderr[-3000:]}")
-    assert "OK" in proc.stdout
-
-
 @pytest.mark.parametrize("case", [
     pytest.param("dense", marks=_legacy_jax),
     "oracle",
     pytest.param("variants", marks=_legacy_jax),
     pytest.param("multipod", marks=_legacy_jax),
 ])
-def test_distributed(case):
-    _run(case)
+def test_distributed(case, run_prog):
+    run_prog(_PROG, case)

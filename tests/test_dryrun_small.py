@@ -1,8 +1,7 @@
 """Integration: the dry-run machinery (lower + compile + cost/collective
-extraction) on a small host mesh, via subprocess (device-count flag)."""
+extraction) on a small host mesh, via the shared ``run_prog`` subprocess
+fixture (device-count flag must precede jax init)."""
 import os
-import subprocess
-import sys
 
 import jax
 import pytest
@@ -13,14 +12,5 @@ import pytest
     reason="nested partial-manual shard_map requires modern jax/XLA "
     "(legacy SPMD partitioner aborts on the trainer's mixed "
     "manual/auto pattern)")
-def test_dryrun_small_mesh():
-    prog = os.path.join(os.path.dirname(__file__), "_dryrun_prog.py")
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
-    proc = subprocess.run([sys.executable, prog], capture_output=True,
-                          text=True, env=env, timeout=900)
-    if proc.returncode != 0:
-        raise AssertionError(
-            f"dryrun small-mesh failed:\n{proc.stdout}\n{proc.stderr[-3000:]}")
-    assert "OK" in proc.stdout
+def test_dryrun_small_mesh(run_prog):
+    run_prog(os.path.join(os.path.dirname(__file__), "_dryrun_prog.py"))

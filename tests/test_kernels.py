@@ -86,6 +86,84 @@ class TestResidualUpdate:
         np.testing.assert_allclose(v_new, v_ref, rtol=1e-5, atol=1e-6)
 
 
+class TestGoldenEdgeShapes:
+    """All four kernels vs their ref.py oracles on the edge geometry the
+    shape sweeps above skip: non-block-multiple lengths, all-zero input,
+    all-survivor input, and single-element leaves."""
+
+    # flat length, block — chosen so the final block is partial (300/128),
+    # a single element (1/128) or exactly one full block (128/128)
+    EDGE = [(300, 128), (1, 128), (127, 128), (129, 128), (128, 128)]
+
+    @staticmethod
+    def _flat(n, kind, seed=5):
+        if kind == "zeros":
+            return jnp.zeros((n,), jnp.float32)
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal(n).astype(np.float32)
+        if kind == "survivors":
+            # every element clears a 0.5 threshold
+            x = np.sign(x) * (np.abs(x) + 1.0)
+        return jnp.asarray(x)
+
+    @pytest.mark.parametrize("n,block", EDGE)
+    @pytest.mark.parametrize("kind", ["normal", "zeros", "survivors"])
+    def test_block_stats_golden(self, n, block, kind):
+        x = self._flat(n, kind)
+        x2d, _ = ops._to2d(x, block)
+        s, m = abs_sum_max(x2d, interpret=True)
+        s_ref, m_ref = ref.abs_sum_max(x)       # zero padding adds nothing
+        np.testing.assert_allclose(s, s_ref, rtol=1e-6)
+        np.testing.assert_allclose(m, m_ref, rtol=1e-6)
+
+    @pytest.mark.parametrize("n,block", EDGE)
+    @pytest.mark.parametrize("kind", ["normal", "zeros", "survivors"])
+    def test_count_gt_golden(self, n, block, kind):
+        x = self._flat(n, kind)
+        x2d, _ = ops._to2d(x, block)
+        for thr in (0.0, 0.5, 100.0):
+            got = count_gt(x2d, jnp.float32(thr), interpret=True)
+            want = ref.count_gt(x, jnp.float32(thr))
+            assert int(got) == int(want), (n, block, kind, thr)
+        if kind == "survivors":
+            assert int(count_gt(x2d, jnp.float32(0.5), interpret=True)) == n
+
+    @pytest.mark.parametrize("n,block", EDGE)
+    @pytest.mark.parametrize("kind", ["normal", "zeros", "survivors"])
+    def test_compact_gt_golden(self, n, block, kind):
+        """Including bucket overflow: all-survivor input with cap < block
+        drops overflow identically in kernel and oracle."""
+        x = self._flat(n, kind)
+        x2d, _ = ops._to2d(x, block)
+        for cap in (8, 32):
+            vals, idx, counts = compact_gt(x2d, jnp.float32(0.5), cap, n,
+                                           interpret=True)
+            v_ref, i_ref, c_ref = ref.compact_gt(x, jnp.float32(0.5),
+                                                 block, cap)
+            np.testing.assert_array_equal(counts, c_ref)
+            np.testing.assert_array_equal(idx, i_ref)
+            np.testing.assert_allclose(vals, v_ref)
+            # padding contract: indices are in range or == sentinel (n)
+            flat = np.asarray(idx).reshape(-1)
+            assert np.all((flat < n) | (flat == n))
+
+    @pytest.mark.parametrize("shape", [(1,), (300,), (1, 1), (127,)])
+    @pytest.mark.parametrize("kind", ["normal", "zeros"])
+    def test_residual_update_golden(self, shape, kind):
+        n = int(np.prod(shape))
+        g = self._flat(n, kind).reshape(shape)
+        rng = np.random.default_rng(9)
+        u = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        v = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        for momentum, nesterov in ((0.0, False), (0.9, False), (0.9, True)):
+            u_new, v_new = ops.residual_update(g, u, v, momentum=momentum,
+                                               nesterov=nesterov)
+            u_ref, v_ref = ref.residual_update(g, u, v, momentum=momentum,
+                                               nesterov=nesterov)
+            np.testing.assert_allclose(u_new, u_ref, rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(v_new, v_ref, rtol=1e-5, atol=1e-6)
+
+
 class TestKernelSelectors:
     """ops.py composite selectors must agree with core/selection.py."""
 

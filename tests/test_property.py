@@ -9,10 +9,12 @@ pytest.importorskip("hypothesis",
                     "requirements-dev.txt); skipping property tests")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core import registry
 from repro.core import selection as sel
 from repro.core import sync
 from repro.core.cost_model import (MURADIN, PIZ_DAINT, TPU_V5E, bandwidth_ratio,
                                    choose_method, t_dense, t_sparse)
+from repro.core.residual import mask_communicated
 
 _settings = settings(max_examples=30, deadline=None)
 
@@ -138,6 +140,90 @@ def test_quantized_message_halves_payload(n, k, seed):
     s = sel.exact_topk_quant(x, k, jnp.int32(0))
     assert sync.pack(s, True).shape[0] == 1 + k + 1
     assert sync.pack(s, False).shape[0] == 1 + 2 * k
+
+
+# ---------------------------------------------------------------------------
+# the Compressor API contract, for EVERY registered compressor
+# ---------------------------------------------------------------------------
+
+_SELECTING = sorted(n for n in registry.names(registry.COMPRESSOR)
+                    if n != "dense")
+
+
+def _roundtrip(comp, x, k):
+    tr = registry.make(registry.TRANSPORT, "fused_allgather", sync_axes=())
+    state = comp.init_leaf(x, momentum=False)._replace(residual=x)
+    s, state = comp.compress(x, k, state)
+    state = mask_communicated(state, s.indices, momentum=False)
+    (gathered,) = tr.allgather([tr.pack(s, comp.quantized)])
+    return s, state.residual, comp.decompress(gathered, x.size, k)
+
+
+@pytest.mark.parametrize("name", _SELECTING)
+@given(vec_and_k())
+@_settings
+def test_compressor_mass_conservation(name, args):
+    """decompress(msg) + residual == grad — exact (bitwise) for plain
+    selectors; total-communicated-mass conservation for quantized ones."""
+    n, k, seed = args
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    comp = registry.make(registry.COMPRESSOR, name)
+    s, residual, dense = _roundtrip(comp, x, k)
+    if comp.quantized:
+        np.testing.assert_allclose(float(jnp.sum(dense)),
+                                   float(jnp.sum(s.values)),
+                                   rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(np.asarray(residual + dense),
+                                      np.asarray(x))
+
+
+@pytest.mark.parametrize("name", _SELECTING)
+@given(vec_and_k())
+@_settings
+def test_compressor_count_capacity_dtype(name, args):
+    """count <= capacity, indices valid + sentinel-padded, f32 wire values,
+    bf16 residual dtype preserved through compress+mask."""
+    n, k, seed = args
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    comp = registry.make(registry.COMPRESSOR, name)
+    s, residual, _ = _roundtrip(comp, x, k)
+    cap = comp.capacity(k)
+    cnt = int(s.count)
+    idx = np.asarray(s.indices)
+    assert 1 <= cnt <= cap
+    assert np.all((idx[:cnt] >= 0) & (idx[:cnt] < n))
+    assert np.all(idx[cnt:] == n)
+    assert s.values.dtype == jnp.float32
+    assert residual.dtype == x.dtype
+
+    bst = comp.init_leaf(x, momentum=False, residual_dtype=jnp.bfloat16)
+    s2, bst2 = comp.compress(x, k, bst)
+    assert mask_communicated(bst2, s2.indices,
+                             momentum=False).residual.dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("name", _SELECTING)
+@given(st.integers(100, 1500), st.integers(1, 24), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_compressor_deterministic_under_jit(name, n, k, seed):
+    k = min(k, n // 4 + 1)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    comp = registry.make(registry.COMPRESSOR, name)
+    st0 = comp.init_leaf(x, momentum=False)
+
+    def f(v, state):
+        s, state = comp.compress(v, k, state)
+        return s.indices, s.values, s.count
+
+    jitted = jax.jit(f)
+    first, second, eager = jitted(x, st0), jitted(x, st0), f(x, st0)
+    for a, b, c in zip(first, second, eager):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
 
 @given(st.integers(64, 4000), st.integers(1, 40), st.integers(0, 2**31 - 1),
