@@ -6,11 +6,14 @@ with p — 67-69% of step time for ResNet50 at 128 GPUs — because the
 gathered message count grows linearly with p (the p·γ1 term of Eq 1).
 
 We reproduce the decomposition two ways:
-  1. modeled: Eq 1 term-by-term for the paper's ResNet50/VGG16 sizes.
-  2. measured: wall time of the actual pipeline stages on this host
-     (selection / pack / [gather skipped on 1 device] / decompress) with
-     the gathered message count scaled artificially to p workers —
-     demonstrating the same linear-unpack growth with real code.
+  1. modeled: Eq 1 term-by-term (``cost_model.predicted_shares`` — the
+     same term definitions fig7 scales) for the paper's ResNet50/VGG16
+     sizes.
+  2. measured: decompression wall time with the gathered message count
+     scaled artificially to p workers — demonstrating the linear-unpack
+     growth with real code. The per-stage (mask/select/pack/transfer/
+     unpack) measurement of the REAL ``GradientSync.update`` pipeline
+     lives in ``benchmarks/bench_transport.py`` (BENCH_transport.json).
 """
 from __future__ import annotations
 
@@ -21,19 +24,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import registry
-from repro.core.cost_model import PIZ_DAINT
+from repro.core.cost_model import PIZ_DAINT, predicted_shares
 from repro.core.residual import init_leaf
 
 
 def modeled_shares(size_mb: float, p: int, density=0.001, net=PIZ_DAINT):
+    """Eq 1 stage shares via the shared cost model; the selection time
+    derives from the model size (``t_select_model``'s one-scan rate)
+    instead of a hard-coded constant, so a 528 MB VGG16 no longer reports
+    the same absolute select cost as a 103 MB ResNet50."""
     m = size_mb * 1024 * 1024 // 4
-    t_sel = 0.003
-    t_lat = np.log2(max(p, 2)) * net.alpha
-    t_bw = (p - 1) * (m * density * 2) * net.beta
-    t_unpack = p * (m * density) * net.gamma1
-    tot = t_sel + t_lat + t_bw + t_unpack
-    return {"select": t_sel / tot, "transfer": (t_lat + t_bw) / tot,
-            "unpack": t_unpack / tot, "total_s": tot}
+    return predicted_shares(p, m, density, net)
 
 
 def measured_unpack_growth(n=4_000_000, density=0.001,
@@ -67,7 +68,6 @@ def main(quick: bool = False):
             sh = modeled_shares(mb, p)
             print(f"{name},{p},{sh['select']:.3f},{sh['transfer']:.3f},"
                   f"{sh['unpack']:.3f}")
-    big = modeled_shares(103, 128)
     print("measured: decompression wall time vs p (real scatter-add)")
     rows = measured_unpack_growth(n=400_000 if quick else 4_000_000,
                                   ps=(2, 8, 32) if quick else (2, 8, 32, 128))

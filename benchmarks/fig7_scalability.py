@@ -20,7 +20,7 @@ Claims validated (paper §6.4):
 """
 from __future__ import annotations
 
-from repro.core.cost_model import MURADIN, PIZ_DAINT, t_dense
+from repro.core.cost_model import MURADIN, PIZ_DAINT, eq1_terms, t_dense
 
 # (name, model MB, fwd GFlop/sample, batch/node, compressed layer count)
 MODELS = {
@@ -45,12 +45,17 @@ def step_time(name: str, p: int, mode: str, net, density=0.001) -> float:
         hidden = min(comm, 0.9 * t_comp) if cnn else 0.0
         return t_comp + comm - hidden
 
-    t_select = n_layers * T_SELECT_PER_LAYER
-    wire_elems = m * density * (1.0 if mode == "quant" else 2.0)
-    t_bw = (p - 1) * wire_elems * net.beta
+    # Eq 1 terms from the shared cost model; fig7 adds its per-layer
+    # overheads on top (selection launch per layer, scatter-add launch
+    # per gathered message) and the §5.6 overlap rule
+    terms = eq1_terms(p, m, density, net,
+                      t_select=n_layers * T_SELECT_PER_LAYER,
+                      quantized=(mode == "quant"))
+    t_bw = terms["bandwidth"]
     hidden = min(t_bw, 0.9 * t_comp) if cnn else 0.0
-    t_unpack = p * (n_layers * UNPACK_LAUNCH + m * density * net.gamma1)
-    return t_comp + t_select + (t_bw - hidden) + t_unpack
+    t_unpack = p * n_layers * UNPACK_LAUNCH + terms["unpack"]
+    return (t_comp + terms["select"] + terms["latency"]
+            + (t_bw - hidden) + t_unpack)
 
 
 def speedup_vs_dense(name: str, p: int, mode: str, net) -> float:

@@ -20,12 +20,14 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (fig3_selection, fig7_scalability, fig10_decomposition,
-                   roofline, tab1_convergence, tab2_batchsize)
+    from . import (bench_transport, fig3_selection, fig7_scalability,
+                   fig10_decomposition, roofline, tab1_convergence,
+                   tab2_batchsize)
     mods = {
         "fig3": fig3_selection, "fig7": fig7_scalability,
         "fig10": fig10_decomposition, "tab1": tab1_convergence,
         "tab2": tab2_batchsize, "roofline": roofline,
+        "transport": bench_transport,
     }
     chosen = (args.only.split(",") if args.only else list(mods))
     failures = []

@@ -134,9 +134,19 @@ class TrainConfig:
     # ("dense_fsdp" is handled only by launch/dryrun's
     # make_fsdp_dense_step branch, not by the GradientSync builder.)
     optimizer: str = "rgc"
-    # sparse collective backend: fused_allgather | per_leaf_allgather |
-    # dense_psum (dense-only baseline)
+    # sparse collective backend: fused_allgather | bucketed_allgather |
+    # hierarchical | per_leaf_allgather | dense_psum (dense-only baseline)
     transport: str = "fused_allgather"
+    # bucketed_allgather: byte budget per fused collective bucket (messages
+    # are greedily packed into contiguous buckets of at most this size;
+    # an oversized leaf gets its own bucket)
+    bucket_bytes: int = 4 * 1024 * 1024
+    # hierarchical transport: mesh axis treated as the intra-node (fast,
+    # dense-psum) hop; None = the LAST sync axis — "local" on the
+    # harness's ("node","local") mesh, "data" on the multi-pod
+    # ("pod","data") batch axes. Every other sync axis forms the
+    # inter-node sparse-allgather hop.
+    intra_axis: Optional[str] = None
     density: float = 0.001
     warmup_steps_per_stage: int = 0
     dense_warmup: bool = False

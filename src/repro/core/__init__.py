@@ -8,42 +8,51 @@ Layering:
                         threshold_bsearch / quantized(inner)
   * ``correction``    — momentum / factor_masking / local_clip / warmup
                         (DGC convergence corrections + spec grammar)
-  * ``transport``     — fused_allgather / per_leaf_allgather / dense_psum
+  * ``transport``     — fused_allgather / bucketed_allgather /
+                        hierarchical / per_leaf_allgather / dense_psum
+  * ``instrument``    — StageTimer implementations (NullTimer /
+                        WallClockTimer) for the Fig 10 stage decomposition
   * ``dispatch``      — size_based (§5.5, real dtype bytes) / fixed
   * ``gradient_sync`` — the composed optax-style transform
   * ``rgc``           — legacy ``rgc_init``/``rgc_apply`` shims
 """
 from . import registry
-from .api import Compressor, Correction, DispatchPolicy, Transport
+from .api import Compressor, Correction, DispatchPolicy, StageTimer, Transport
 from .compressors import Dense, ExactTopK, Quantized, ThresholdBSearch, \
     TrimmedTopK
 from .correction import (CorrectionBase, FactorMasking, LocalClip,
                          MomentumCorrection, Warmup, split_corrections)
-from .cost_model import (NetworkModel, PRESETS, choose_method, speedup,
-                         t_dense, t_sparse)
+from .cost_model import (NetworkModel, PRESETS, choose_method, eq1_terms,
+                         predicted_shares, speedup, t_dense, t_select_model,
+                         t_sparse)
 from .dispatch import FixedPolicy, SizeBasedPolicy, leaf_nbytes
 from .gradient_sync import GradientSync, build_gradient_sync
+from .instrument import STAGES, NullTimer, WallClockTimer
 from .rgc import RGCConfig, gradient_sync_from_rgc_config, rgc_apply, rgc_init
 from .schedule import DensitySchedule
 from .selection import (Selected, exact_topk, exact_topk_quant,
                         threshold_binary_search, threshold_binary_search_quant,
                         threshold_filter, trimmed_topk, trimmed_topk_quant)
-from .transport import DensePsum, FusedAllgather, PerLeafAllgather
+from .transport import (BucketedAllgather, DensePsum, FusedAllgather,
+                        HierarchicalAllgather, PerLeafAllgather,
+                        assign_buckets)
 
 __all__ = [
     "registry",
-    "Compressor", "Correction", "DispatchPolicy", "Transport",
+    "Compressor", "Correction", "DispatchPolicy", "StageTimer", "Transport",
     "Dense", "ExactTopK", "Quantized", "ThresholdBSearch", "TrimmedTopK",
     "CorrectionBase", "FactorMasking", "LocalClip", "MomentumCorrection",
     "Warmup", "split_corrections",
-    "NetworkModel", "PRESETS", "choose_method", "speedup", "t_dense",
-    "t_sparse",
+    "NetworkModel", "PRESETS", "choose_method", "eq1_terms",
+    "predicted_shares", "speedup", "t_dense", "t_select_model", "t_sparse",
     "FixedPolicy", "SizeBasedPolicy", "leaf_nbytes",
     "GradientSync", "build_gradient_sync",
+    "STAGES", "NullTimer", "WallClockTimer",
     "RGCConfig", "gradient_sync_from_rgc_config", "rgc_apply", "rgc_init",
     "DensitySchedule",
     "Selected", "exact_topk", "exact_topk_quant", "threshold_binary_search",
     "threshold_binary_search_quant", "threshold_filter", "trimmed_topk",
     "trimmed_topk_quant",
-    "DensePsum", "FusedAllgather", "PerLeafAllgather",
+    "BucketedAllgather", "DensePsum", "FusedAllgather",
+    "HierarchicalAllgather", "PerLeafAllgather", "assign_buckets",
 ]

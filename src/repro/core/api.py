@@ -17,8 +17,20 @@ four swappable protocols, each string-addressable via
 ``Transport``
     Wire packing + collectives over ``sync_axes``. Implementations:
     ``fused_allgather`` (§5.3 tensor fusion: one collective for all
-    leaves), ``per_leaf_allgather``, and ``dense_psum`` (dense baseline —
-    sparse messages are a configuration error).
+    leaves), ``bucketed_allgather`` (§5.3 fusion under a fixed byte
+    budget — one collective per bucket), ``hierarchical`` (§5.4
+    intra-node dense psum + inter-node sparse allgather on a 2-axis
+    mesh), ``per_leaf_allgather``, and ``dense_psum`` (dense baseline —
+    sparse messages are a configuration error). Every transport carries a
+    ``StageTimer`` hook for instrumentation-grade counters.
+
+``StageTimer``
+    Stage instrumentation hook threaded through ``GradientSync.update``
+    and the transports: each pipeline stage (``mask`` / ``select`` /
+    ``pack`` / ``transfer`` / ``unpack`` — Fig 10's decomposition) runs
+    inside ``timer.stage(name, thunk)``. ``repro.core.instrument`` ships
+    ``NullTimer`` (free, trace-safe default) and ``WallClockTimer``
+    (barriered wall-clock sampling for eager benchmark runs).
 
 ``DispatchPolicy``
     Chooses a compressor *name* per leaf. ``size_based`` is the paper's
@@ -79,11 +91,36 @@ class Compressor(Protocol):
 
 
 @runtime_checkable
+class StageTimer(Protocol):
+    """Pipeline stage instrumentation (Fig 10's mask/select/pack/transfer/
+    unpack decomposition). ``stage`` executes and may time a stage body;
+    ``count`` records dimensionless facts (collectives per step, bucket
+    counts). Implementations: ``instrument.NullTimer`` (default; ``stage``
+    is a bare passthrough, safe under tracing) and
+    ``instrument.WallClockTimer`` (eager-mode barriered timing)."""
+
+    active: bool
+
+    def stage(self, name: str, thunk: Any) -> Any:
+        """Run ``thunk()`` as pipeline stage ``name``; return its value."""
+        ...
+
+    def count(self, name: str, n: int = 1) -> None:
+        """Accumulate a counter (no barrier, no timing)."""
+        ...
+
+    def summary(self) -> dict:
+        """Collected per-stage timings/counters ({} for null timers)."""
+        ...
+
+
+@runtime_checkable
 class Transport(Protocol):
     """Wire packing + collectives over the data-parallel mesh axes."""
 
     name: str
     sync_axes: tuple[str, ...]
+    timer: Any            # StageTimer hook (NullTimer when unset)
 
     def num_workers(self) -> int:
         """Product of ``sync_axes`` sizes (1 outside any mesh)."""

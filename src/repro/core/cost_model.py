@@ -48,19 +48,41 @@ TPU_V5E = NetworkModel("tpu-v5e-ici", alpha=1e-6, bandwidth=50e9,
 PRESETS = {m.name: m for m in (MURADIN, PIZ_DAINT, TPU_V5E)}
 
 
+# Effective selection scan rate [elements/s]: trimmed top-k style single
+# pass over the residual at a fraction of memory bandwidth (Fig 3 scale —
+# a 27M-element ResNet50 selects in ~3 ms on the paper's GPUs).
+SELECT_THROUGHPUT = 9e9
+
+
+def t_select_model(m: int, throughput: float = SELECT_THROUGHPUT) -> float:
+    """Modeled selection time for an ``m``-element residual (one scan)."""
+    return m / throughput
+
+
+def eq1_terms(p: int, m: int, density: float, net: NetworkModel,
+              t_select: float = 0.0, quantized: bool = False) -> dict:
+    """Eq 1 term-by-term: the ONE definition of the sparse-step costs.
+
+    ``m`` in elements. The wire message is k indices + k values (2k
+    elements); quantization replaces the values with one scalar mean, so
+    the payload halves to ~k elements (§5.2.3). ``unpack`` is the p·γ₁
+    decompression term that Fig 10 shows dominating at scale. Both the
+    scalar ``t_sparse`` and the Fig 7/10 benchmark decompositions are
+    sums/shares of exactly these terms.
+    """
+    wire_elems = m * density * (1.0 if quantized else 2.0)
+    return {
+        "select": t_select,
+        "latency": math.log2(max(p, 2)) * net.alpha,
+        "bandwidth": (p - 1) * wire_elems * net.beta,
+        "unpack": p * (m * density) * net.gamma1,
+    }
+
+
 def t_sparse(p: int, m: int, density: float, net: NetworkModel,
              t_select: float = 0.0, quantized: bool = False) -> float:
-    """Eq 1. ``m`` in elements. Quantization halves the value payload
-    (indices + one scalar instead of indices + values)."""
-    payload = m * density * (1.0 if quantized else 2.0) / 2.0
-    # payload above is in "index+value pairs" halves: full message is
-    # k indices + k values (2k elems); quantized is k indices + 1 (~k elems).
-    wire_elems = m * density * (1.0 if quantized else 2.0)
-    del payload
-    return (t_select
-            + math.log2(max(p, 2)) * net.alpha
-            + (p - 1) * wire_elems * net.beta
-            + p * (m * density) * net.gamma1)
+    """Eq 1 (the sum of ``eq1_terms``)."""
+    return sum(eq1_terms(p, m, density, net, t_select, quantized).values())
 
 
 def t_dense(p: int, m: int, net: NetworkModel) -> float:
@@ -73,6 +95,28 @@ def t_dense(p: int, m: int, net: NetworkModel) -> float:
 def speedup(p: int, m: int, density: float, net: NetworkModel,
             t_select: float = 0.0, quantized: bool = False) -> float:
     return t_dense(p, m, net) / t_sparse(p, m, density, net, t_select, quantized)
+
+
+def predicted_shares(p: int, m: int, density: float, net: NetworkModel,
+                     t_select: float | None = None,
+                     quantized: bool = False) -> dict:
+    """Fig 10 modeled decomposition: share of step time per stage.
+
+    ``t_select=None`` derives the selection time from ``t_select_model``
+    (one residual scan) instead of a hard-coded constant. ``transfer``
+    folds the latency and bandwidth terms together, matching how the
+    measured pipeline times its single ``transfer`` stage.
+    """
+    if t_select is None:
+        t_select = t_select_model(m)
+    terms = eq1_terms(p, m, density, net, t_select, quantized)
+    tot = sum(terms.values())
+    return {
+        "select": terms["select"] / tot,
+        "transfer": (terms["latency"] + terms["bandwidth"]) / tot,
+        "unpack": terms["unpack"] / tot,
+        "total_s": tot,
+    }
 
 
 def bandwidth_ratio(p: int, density: float) -> float:

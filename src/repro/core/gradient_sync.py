@@ -46,6 +46,7 @@ from .api import Compressor, Correction, DispatchPolicy, Transport
 from .compressors import _Base as _CompressorBase  # noqa: F401 (registration)
 from .correction import LocalClip, MomentumCorrection, split_corrections
 from .dispatch import FixedPolicy, SizeBasedPolicy
+from .instrument import NullTimer
 from .residual import LeafState, accumulate, mask_communicated
 from .transport import FusedAllgather  # noqa: F401 (registration)
 
@@ -74,9 +75,14 @@ class GradientSync:
     # parameter bag threaded to compressor factories (backend,
     # bsearch_interval, trim_eps, ...)
     compressor_params: dict = field(default_factory=dict)
+    # stage-timer hook (core.instrument): NullTimer (free, trace-safe) by
+    # default; bench_transport swaps in a WallClockTimer for eager runs
+    timer: Any = None
     _compressors: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self) -> None:
+        if self.timer is None:
+            self.timer = NullTimer()
         corr = list(self.corrections or ())
         names = {c.name for c in corr}
         if self.local_clip is not None and "local_clip" not in names:
@@ -182,37 +188,54 @@ class GradientSync:
             plan.append((i, self._leaf_compressor(name, paths[i]), k))
 
         # --- pass 1: residual update + selection + message packing ---------
+        # Each stage body routes through the StageTimer hook
+        # (core.instrument): a free passthrough under jit/NullTimer, a
+        # barriered wall-clock sample per stage when bench_transport runs
+        # the pipeline eagerly (the measured Fig 10 decomposition).
+        timer = self.timer
         messages: list[jax.Array] = []
         msg_meta: list[tuple[int, Compressor, int]] = []  # (leaf, comp, k)
         new_states: list[LeafState] = list(leaves_s)
         for i, comp, k in plan:
             if comp is None:
                 continue
-            st = self._accumulate(leaves_g[i], leaves_p[i], leaves_s[i])
+            st = timer.stage("mask", lambda i=i: self._accumulate(
+                leaves_g[i], leaves_p[i], leaves_s[i]))
             flat_v = st.residual.reshape(-1).astype(jnp.float32)
-            selected, st = comp.compress(flat_v, k, st)
-            st = mask_communicated(st, selected.indices, momentum=False)
-            for c in self.corrections:
-                st = c.on_communicated(st, selected.indices)
-            new_states[i] = st
-            messages.append(self.transport.pack(selected, comp.quantized))
+            selected, st = timer.stage(
+                "select", lambda f=flat_v, st=st: comp.compress(f, k, st))
+
+            def _mask(st=st, sel=selected):
+                st2 = mask_communicated(st, sel.indices, momentum=False)
+                for c in self.corrections:
+                    st2 = c.on_communicated(st2, sel.indices)
+                return st2
+            new_states[i] = timer.stage("mask", _mask)
+            messages.append(timer.stage(
+                "pack",
+                lambda sel=selected: self.transport.pack(sel, comp.quantized)))
             msg_meta.append((i, comp, k))
 
         # --- pass 2: synchronization ---------------------------------------
-        gathered = self.transport.allgather(messages)
+        gathered = timer.stage(
+            "transfer", lambda: self.transport.allgather(messages))
 
         # --- pass 3: decompress + apply ------------------------------------
         new_params: list[jax.Array] = list(leaves_p)
         for buf, (i, comp, k) in zip(gathered, msg_meta):
-            g_sum = comp.decompress(buf, leaves_p[i].size, k)
-            upd = (g_sum / n_workers).reshape(leaves_p[i].shape)
-            new_params[i] = (leaves_p[i].astype(jnp.float32)
-                             - lr * upd).astype(leaves_p[i].dtype)
+            def _unpack(buf=buf, i=i, comp=comp, k=k):
+                g_sum = comp.decompress(buf, leaves_p[i].size, k)
+                upd = (g_sum / n_workers).reshape(leaves_p[i].shape)
+                return (leaves_p[i].astype(jnp.float32)
+                        - lr * upd).astype(leaves_p[i].dtype)
+            new_params[i] = timer.stage("unpack", _unpack)
 
         for i, comp, _k in plan:
             if comp is not None:
                 continue
-            g_mean = self.transport.allreduce_mean(leaves_g[i])
+            g_mean = timer.stage(
+                "transfer",
+                lambda i=i: self.transport.allreduce_mean(leaves_g[i]))
             st = leaves_s[i]
             if self.weight_decay:
                 g_mean = g_mean + self.weight_decay * \
@@ -246,6 +269,9 @@ def build_gradient_sync(
     trimmed_threshold_bytes: int | None = None,
     warmup_steps_per_stage: int = 0,
     dense_warmup: bool = False,
+    bucket_bytes: int | None = None,
+    intra_axis: str | None = None,
+    timer: Any = None,
     **compressor_params: Any,
 ) -> GradientSync:
     """Build a ``GradientSync`` from string-addressable component names.
@@ -265,6 +291,13 @@ def build_gradient_sync(
     ``"rgc"`` had it), and naming a correction already implied by a field
     just fixes its position in the pipeline. Ablate by zeroing the field,
     not by omitting the name.
+
+    Transport knobs: ``bucket_bytes`` (bucketed_allgather's per-collective
+    byte budget) and ``intra_axis`` (hierarchical's intra-node mesh axis;
+    default = last sync axis) are forwarded to the transport factory;
+    factories ignore knobs they don't consume. ``timer`` is the
+    ``StageTimer`` hook shared by the sync loop and the transport
+    (``None`` -> ``NullTimer``).
     """
     corr_names, base = split_corrections(optimizer)
     optimizer = base or "rgc"
@@ -304,10 +337,18 @@ def build_gradient_sync(
             f"by '+'-joined corrections "
             f"{registry.names(registry.CORRECTION)}")
 
+    timer = timer if timer is not None else NullTimer()
+    transport_kw: dict[str, Any] = {"sync_axes": tuple(sync_axes),
+                                    "timer": timer}
+    if bucket_bytes is not None:
+        transport_kw["bucket_bytes"] = bucket_bytes
+    if intra_axis is not None:
+        transport_kw["intra_axis"] = intra_axis
+
     return GradientSync(
         policy=policy,
         transport=registry.make(registry.TRANSPORT, transport,
-                                sync_axes=tuple(sync_axes)),
+                                **transport_kw),
         density=density,
         momentum=momentum,
         nesterov=nesterov,
@@ -318,4 +359,5 @@ def build_gradient_sync(
         residual_dtype=residual_dtype,
         corrections=corrections,
         compressor_params=dict(compressor_params),
+        timer=timer,
     )

@@ -1,0 +1,96 @@
+"""Stage instrumentation for the sync pipeline (Fig 10's decomposition).
+
+``GradientSync.update`` and the transports thread every pipeline stage
+through a ``StageTimer`` hook so the paper's Fig 10 time decomposition —
+``mask`` (residual/momentum accumulation + state masking), ``select``
+(communication-set selection), ``pack`` (wire-format packing),
+``transfer`` (the collectives, sparse and dense), ``unpack``
+(scatter-add decompression + parameter apply) — can be measured on the
+REAL pipeline instead of an artificial loop.
+
+Two implementations:
+
+* ``NullTimer`` — the default everywhere. ``stage`` just calls the thunk;
+  safe (and free) under ``jit``/``shard_map`` tracing.
+* ``WallClockTimer`` — wraps each stage with a ``jax.block_until_ready``
+  barrier and accumulates wall time per stage. Only meaningful for EAGER
+  (op-by-op) execution: under ``jit`` the thunk runs once at trace time
+  and the barrier is a no-op on tracers, so times would be trace times.
+  ``benchmarks/bench_transport.py`` runs the pipeline eagerly with this
+  timer and emits ``BENCH_transport.json``.
+
+Counters (``count``) record dimensionless stage facts — e.g. the
+bucketed transport's collective count per step — without a barrier.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Any, Callable
+
+import jax
+
+# Canonical stage order of one sync step (Fig 10's x-axis).
+STAGES = ("mask", "select", "pack", "transfer", "unpack")
+
+
+class NullTimer:
+    """No-op timer: zero overhead, trace-safe. The default hook."""
+
+    active = False
+
+    def stage(self, name: str, thunk: Callable[[], Any]) -> Any:
+        return thunk()
+
+    def count(self, name: str, n: int = 1) -> None:
+        pass
+
+    def summary(self) -> dict:
+        return {}
+
+
+class WallClockTimer:
+    """Per-stage wall-clock accumulator with device barriers (eager only)."""
+
+    active = True
+
+    def __init__(self) -> None:
+        self.times: dict[str, list[float]] = defaultdict(list)
+        self.counts: dict[str, int] = defaultdict(int)
+
+    def stage(self, name: str, thunk: Callable[[], Any]) -> Any:
+        t0 = time.perf_counter()
+        out = thunk()
+        jax.block_until_ready(out)
+        self.times[name].append(time.perf_counter() - t0)
+        return out
+
+    def count(self, name: str, n: int = 1) -> None:
+        self.counts[name] += n
+
+    def reset(self) -> None:
+        self.times.clear()
+        self.counts.clear()
+
+    def summary(self) -> dict:
+        """Per-stage totals/means plus the share of the summed stage time.
+
+        ``{"stages": {name: {calls, total_s, mean_ms, share}},
+           "counts": {...}, "total_s": float}``; stage order follows
+        ``STAGES`` with any custom stage names appended.
+        """
+        totals = {n: sum(ts) for n, ts in self.times.items()}
+        grand = sum(totals.values())
+        order = [s for s in STAGES if s in totals] + sorted(
+            n for n in totals if n not in STAGES)
+        stages = {}
+        for n in order:
+            ts = self.times[n]
+            stages[n] = {
+                "calls": len(ts),
+                "total_s": totals[n],
+                "mean_ms": 1e3 * totals[n] / max(len(ts), 1),
+                "share": totals[n] / grand if grand > 0 else 0.0,
+            }
+        return {"stages": stages, "counts": dict(self.counts),
+                "total_s": grand}

@@ -88,11 +88,65 @@ def fused_allgather(messages: list[jax.Array], axes: tuple[str, ...]) -> list[ja
     lens = [int(m.shape[0]) for m in messages]
     buf = jnp.concatenate(messages)
     gathered = sparse_allgather(buf, axes)             # [p, sum(lens)]
+    return split_rows(gathered, lens)
+
+
+def split_rows(gathered: jax.Array, lens: list[int]) -> list[jax.Array]:
+    """[p, sum(lens)] fused buffer -> per-leaf [p, len] segments."""
     out, off = [], 0
     for length in lens:
         out.append(gathered[:, off : off + length])
         off += length
     return out
+
+
+def hierarchical_allgather(msg: jax.Array, inter_axes: tuple[str, ...],
+                           intra_axis: str | None,
+                           sync_axes: tuple[str, ...] | None = None
+                           ) -> jax.Array:
+    """§5.4 two-level exchange: inter-node sparse allgather + intra-node
+    dense psum.
+
+    Hop 1 gathers the packed sparse messages over the (slow) inter-node
+    axes only — each worker receives the messages of its same-local-rank
+    peer on every node, so the expensive hop carries p/n_local messages
+    instead of p. Hop 2 reassembles the full [p, len] message matrix over
+    the (fast) intra-node axis as a dense psum: every worker scatters its
+    inter-gathered rows into a zero-initialized full buffer at its own
+    local-rank slot and the psum sums the disjoint contributions.
+
+    The psum runs on the buffer bitcast to int32: each matrix entry is
+    written by exactly one local worker (the rest contribute integer
+    zeros), so integer addition makes the reassembly an exact bit move.
+    An f32 psum would corrupt the message — the wire format embeds
+    bitcast-int32 counts/indices whose f32 views are denormals, and
+    backends running flush-to-zero (XLA:CPU reductions do) would zero
+    them. Downstream decompression therefore sees byte-identical input to
+    a flat ``sparse_allgather`` over the FULL axis tuple: rows come out
+    inter-major, and when ``sync_axes`` names an order with the intra
+    axis elsewhere than last (``jax.lax.all_gather`` over the joint axes
+    is first-axis-major), the block is transposed back into that order —
+    so parity with the flat gather holds for any ``intra_axis`` choice.
+    """
+    if intra_axis is None:
+        return sparse_allgather(msg, inter_axes)
+    if not inter_axes:
+        return sparse_allgather(msg, (intra_axis,))
+    from repro.jaxcompat import axis_size
+    g_inter = sparse_allgather(msg, inter_axes)        # [n_inter, len]
+    n_local = axis_size(intra_axis)
+    my_rank = jax.lax.axis_index(intra_axis)
+    full = jnp.zeros((g_inter.shape[0], n_local, g_inter.shape[1]),
+                     jnp.int32)
+    full = jax.lax.dynamic_update_slice_in_dim(
+        full, _f2i(g_inter)[:, None, :], my_rank, axis=1)
+    full = jax.lax.psum(full, intra_axis)
+    out = _i2f(full)                                   # [n_inter, n_local, L]
+    if sync_axes and tuple(sync_axes) != tuple(inter_axes) + (intra_axis,):
+        sizes = [axis_size(a) for a in inter_axes]
+        out = out.reshape(*sizes, n_local, out.shape[-1])
+        out = jnp.moveaxis(out, len(sizes), sync_axes.index(intra_axis))
+    return out.reshape(-1, msg.shape[0])
 
 
 def dense_allreduce_mean(grad: jax.Array, axes: tuple[str, ...]) -> jax.Array:

@@ -43,9 +43,12 @@ def main() -> None:
                     help="rgc | rgc_quant | dense | any registered "
                     "compressor spec, e.g. threshold_bsearch or "
                     "'quantized(trimmed_topk)'")
+    from repro.core import registry
     ap.add_argument("--transport", default="fused_allgather",
-                    choices=["fused_allgather", "per_leaf_allgather",
-                             "dense_psum"])
+                    choices=list(registry.names(registry.TRANSPORT)))
+    ap.add_argument("--bucket-bytes", type=int, default=None,
+                    help="bucketed_allgather: byte budget per fused "
+                    "collective bucket (default 4 MiB)")
     ap.add_argument("--density", type=float, default=0.01)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--warmup-steps-per-stage", type=int, default=0)
@@ -71,6 +74,9 @@ def main() -> None:
                      optimizer=args.optimizer, transport=args.transport,
                      density=args.density,
                      warmup_steps_per_stage=args.warmup_steps_per_stage)
+    if args.bucket_bytes is not None:
+        import dataclasses
+        tc = dataclasses.replace(tc, bucket_bytes=args.bucket_bytes)
     trainer = Trainer(cfg, tc, mesh=mesh, ckpt_dir=args.ckpt_dir)
     state = trainer.init_state()
     n = sum(x.size for x in jax.tree.leaves(state.params))

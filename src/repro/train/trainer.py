@@ -83,12 +83,17 @@ def make_rgc_config(tc: TrainConfig, mesh: Optional[Mesh]) -> RGCConfig:
     )
 
 
-def make_gradient_sync(tc: TrainConfig, mesh: Optional[Mesh]) -> GradientSync:
+def make_gradient_sync(tc: TrainConfig, mesh: Optional[Mesh],
+                       timer: Any = None) -> GradientSync:
     """Build the composed sync transform a TrainConfig describes.
 
     ``tc.optimizer`` may be "rgc" / "rgc_quant" / "dense" or any
     registered compressor spec (e.g. "threshold_bsearch",
     "quantized(trimmed_topk)") — see repro.core.registry.
+    ``tc.transport`` picks the collective backend; ``tc.bucket_bytes`` /
+    ``tc.intra_axis`` parameterize the bucketed / hierarchical backends.
+    ``timer`` threads a StageTimer hook through the pipeline (eager
+    benchmark runs); None = free NullTimer.
     """
     return build_gradient_sync(
         tc.optimizer,
@@ -102,6 +107,9 @@ def make_gradient_sync(tc: TrainConfig, mesh: Optional[Mesh]) -> GradientSync:
         residual_dtype=_residual_dtype(tc),
         warmup_steps_per_stage=tc.warmup_steps_per_stage,
         dense_warmup=tc.dense_warmup,
+        bucket_bytes=tc.bucket_bytes,
+        intra_axis=tc.intra_axis,
+        timer=timer,
     )
 
 

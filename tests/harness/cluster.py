@@ -2,7 +2,8 @@
 
 The harness splits one host CPU into N XLA devices
 (``--xla_force_host_platform_device_count``), builds a pure data-parallel
-``("data",)`` mesh over them, and drives real training loops through
+mesh over them — flat ``("data",)`` or, for the hierarchical transport,
+2-axis ``("node", "local")`` — and drives real training loops through
 ``repro.train.trainer.Trainer`` — the trainer's fully-manual shard_map
 path, which runs on both legacy (0.4.x) and modern jax. Each worker sees
 its own batch shard and computes LOCAL gradients, so the residual /
@@ -72,12 +73,31 @@ def make_data_mesh(num_devices: int | None = None):
     return _make_mesh((n,), ("data",))
 
 
+def make_node_mesh(nodes: int = 2, local: int | None = None):
+    """2-axis ``("node", "local")`` mesh over the forced host devices —
+    the simulated multi-node cluster the ``hierarchical`` transport syncs
+    over (inter-node sparse allgather on "node", intra-node dense psum on
+    "local"). ``local=None`` uses all remaining devices per node."""
+    import jax
+
+    from repro.launch.mesh import _make_mesh
+    n = len(jax.devices())
+    if local is None:
+        if n % nodes:
+            raise ValueError(f"{n} devices not divisible by {nodes} nodes")
+        local = n // nodes
+    return _make_mesh((nodes, local), ("node", "local"))
+
+
 def train_and_eval(
     arch: str,
     optimizer: str,
     steps: int,
     *,
     transport: str = "fused_allgather",
+    bucket_bytes: int | None = None,
+    intra_axis: str | None = None,
+    nodes: int | None = None,
     lr: float = 0.1,
     momentum: float = 0.9,
     density: float = 0.01,
@@ -93,10 +113,18 @@ def train_and_eval(
 ) -> dict[str, Any]:
     """One real training run on the simulated cluster + held-out loss.
 
+    ``nodes=N`` runs on the 2-axis ``("node","local")`` mesh (N nodes x
+    devices/N locals) instead of the flat ``("data",)`` mesh — the
+    hierarchical transport's home. ``bucket_bytes`` / ``intra_axis``
+    parameterize the bucketed / hierarchical transports (None = the
+    TrainConfig defaults).
+
     Returns ``{"held_loss", "losses", "num_devices", "steps"}``; ``losses``
     is the per-step training-loss trace (loss is pmean'd over workers
     inside the step, so it is the global-batch loss).
     """
+    import dataclasses
+
     import jax
     import jax.numpy as jnp
 
@@ -110,7 +138,17 @@ def train_and_eval(
                      local_clip=local_clip,
                      warmup_steps_per_stage=warmup_steps_per_stage,
                      dense_warmup=dense_warmup, seed=seed)
-    mesh = make_data_mesh() if use_mesh else None
+    overrides = {k: v for k, v in
+                 (("bucket_bytes", bucket_bytes), ("intra_axis", intra_axis))
+                 if v is not None}
+    if overrides:
+        tc = dataclasses.replace(tc, **overrides)
+    if not use_mesh:
+        mesh = None
+    elif nodes is not None:
+        mesh = make_node_mesh(nodes)
+    else:
+        mesh = make_data_mesh()
     tr = Trainer(cfg, tc, mesh=mesh)
     state = tr.init_state()
 

@@ -40,7 +40,8 @@ class TestRegistry:
 
     def test_every_transport_constructible_by_name(self):
         names = registry.names(registry.TRANSPORT)
-        assert set(names) == {"fused_allgather", "per_leaf_allgather",
+        assert set(names) == {"fused_allgather", "bucketed_allgather",
+                              "hierarchical", "per_leaf_allgather",
                               "dense_psum"}
         for name in names:
             tr = registry.make(registry.TRANSPORT, name, sync_axes=())

@@ -1,0 +1,215 @@
+"""Transport-layer tests: bucket assignment, registration, single-worker
+bitwise parity, the stage-timer hook, and the 8-device subprocess parity
+program (bucketed / hierarchical vs fused, mixed-size and single-leaf
+pytrees on the simulated cluster)."""
+import os
+
+import numpy as np
+import pytest
+
+TRANSPORT_PROG = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "_transport_prog.py")
+
+
+# ---------------------------------------------------------------------------
+# bucket-boundary assignment (pure python, pinned)
+# ---------------------------------------------------------------------------
+
+class TestAssignBuckets:
+    def test_pinned_layout(self):
+        from repro.core.transport import assign_buckets
+        # greedy contiguous fill: a message joins the open bucket unless
+        # it would overflow the budget
+        assert assign_buckets([100, 100, 100], 250) == [[0, 1], [2]]
+        assert assign_buckets([100, 200, 50, 50, 300, 10], 300) == \
+            [[0, 1], [2, 3], [4], [5]]
+
+    def test_exact_fit_is_kept(self):
+        from repro.core.transport import assign_buckets
+        # boundary pin: filling the budget EXACTLY does not open a new
+        # bucket; one byte more does
+        assert assign_buckets([150, 150], 300) == [[0, 1]]
+        assert assign_buckets([150, 151], 300) == [[0], [1]]
+
+    def test_oversized_message_gets_own_bucket(self):
+        from repro.core.transport import assign_buckets
+        assert assign_buckets([500], 300) == [[0]]
+        # an over-budget bucket never grows further: the trailing message
+        # opens a fresh bucket rather than riding the oversized one
+        assert assign_buckets([10, 500, 10], 300) == [[0], [1], [2]]
+
+    def test_empty_and_invalid(self):
+        from repro.core.transport import assign_buckets
+        assert assign_buckets([], 300) == []
+        with pytest.raises(ValueError):
+            assign_buckets([10], 0)
+
+    def test_nothing_dropped(self):
+        from repro.core.transport import assign_buckets
+        rng = np.random.default_rng(0)
+        sizes = [int(s) for s in rng.integers(1, 5000, size=200)]
+        buckets = assign_buckets(sizes, 8192)
+        flat = [i for b in buckets for i in b]
+        assert flat == list(range(len(sizes)))   # order-preserving, total
+        assert all(b for b in buckets)
+
+
+# ---------------------------------------------------------------------------
+# registration + construction
+# ---------------------------------------------------------------------------
+
+def test_transports_registered():
+    from repro.core import registry
+    names = registry.names(registry.TRANSPORT)
+    assert "bucketed_allgather" in names
+    assert "hierarchical" in names
+
+
+def test_hierarchical_axis_resolution():
+    from repro.core.transport import HierarchicalAllgather
+    t = HierarchicalAllgather(("node", "local"))
+    assert t.intra_axis == "local" and t.inter_axes == ("node",)
+    t = HierarchicalAllgather(("pod", "data"), intra_axis="pod")
+    assert t.intra_axis == "pod" and t.inter_axes == ("data",)
+    # fewer than two sync axes: no hierarchy to exploit -> flat gather
+    t = HierarchicalAllgather(("data",))
+    assert t.intra_axis is None and t.inter_axes == ("data",)
+    with pytest.raises(ValueError):
+        HierarchicalAllgather(("node", "local"), intra_axis="bogus")
+
+
+def test_builder_threads_transport_knobs():
+    from repro.core import build_gradient_sync
+    sync = build_gradient_sync("rgc", transport="bucketed_allgather",
+                               bucket_bytes=12345)
+    assert sync.transport.bucket_bytes == 12345
+    sync = build_gradient_sync("rgc", transport="hierarchical",
+                               sync_axes=("node", "local"))
+    assert sync.transport.intra_axis == "local"
+
+
+# ---------------------------------------------------------------------------
+# single-worker bitwise parity (eager, sync_axes=()): every transport must
+# agree with fused exactly when p=1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transport,kw", [
+    ("bucketed_allgather", {"bucket_bytes": 30_000}),
+    ("hierarchical", {}),
+    ("per_leaf_allgather", {}),
+])
+def test_single_worker_parity(transport, kw):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_gradient_sync
+
+    rng = np.random.default_rng(0)
+    params = {"a": jnp.asarray(rng.standard_normal(50_000), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal(40_000), jnp.float32),
+              "c": jnp.asarray(rng.standard_normal(500), jnp.float32)}
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+
+    def run(name, **tkw):
+        sync = build_gradient_sync("rgc", transport=name, sync_axes=(),
+                                   density=0.01, dense_threshold_bytes=4096,
+                                   **tkw)
+        st = sync.init(params)
+        return sync.update(grads, st, params, jnp.float32(0.1))
+
+    ref_p, ref_s = run("fused_allgather")
+    got_p, got_s = run(transport, **kw)
+    for a, b in zip(jax.tree.leaves(ref_p), jax.tree.leaves(got_p)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(ref_s), jax.tree.leaves(got_s)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# stage-timer hook
+# ---------------------------------------------------------------------------
+
+def test_wallclock_timer_records_stages():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import STAGES, WallClockTimer, build_gradient_sync
+
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.standard_normal(60_000), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal(100), jnp.float32)}
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+
+    timer = WallClockTimer()
+    sync = build_gradient_sync("rgc", transport="bucketed_allgather",
+                               sync_axes=(), density=0.01,
+                               dense_threshold_bytes=4096, timer=timer)
+    assert sync.transport.timer is timer     # one hook, shared
+    st = sync.init(params)
+    sync.update(grads, st, params, jnp.float32(0.1))
+
+    summ = timer.summary()
+    for stage in STAGES:
+        assert stage in summ["stages"], f"missing stage {stage}"
+        assert summ["stages"][stage]["calls"] >= 1
+        assert summ["stages"][stage]["total_s"] >= 0.0
+    assert summ["counts"]["buckets"] >= 1
+    assert abs(sum(s["share"] for s in summ["stages"].values()) - 1.0) < 1e-9
+    timer.reset()
+    assert timer.summary()["total_s"] == 0
+
+
+def test_null_timer_is_passthrough():
+    from repro.core import NullTimer
+    t = NullTimer()
+    assert t.stage("select", lambda: 42) == 42
+    t.count("buckets", 3)
+    assert t.summary() == {}
+
+
+# ---------------------------------------------------------------------------
+# cost model: Eq 1 terms are the single source of the benchmark math
+# ---------------------------------------------------------------------------
+
+def test_eq1_terms_sum_to_t_sparse():
+    from repro.core.cost_model import PIZ_DAINT, eq1_terms, t_sparse
+    for p in (2, 32, 128):
+        terms = eq1_terms(p, 10_000_000, 0.001, PIZ_DAINT, t_select=0.002)
+        assert set(terms) == {"select", "latency", "bandwidth", "unpack"}
+        assert sum(terms.values()) == pytest.approx(
+            t_sparse(p, 10_000_000, 0.001, PIZ_DAINT, t_select=0.002))
+
+
+def test_predicted_shares_normalized():
+    from repro.core.cost_model import PIZ_DAINT, predicted_shares
+    sh = predicted_shares(128, 27_000_000, 0.001, PIZ_DAINT)
+    assert sh["select"] + sh["transfer"] + sh["unpack"] == pytest.approx(1.0)
+    assert sh["total_s"] > 0
+    # t_select now derives from the model size: a 5x bigger model must not
+    # report the same absolute select time (the old hard-coded 0.003 did)
+    sh_big = predicted_shares(128, 5 * 27_000_000, 0.001, PIZ_DAINT)
+    assert sh_big["total_s"] > sh["total_s"]
+
+
+# ---------------------------------------------------------------------------
+# the 8-device parity program (subprocess; real multi-worker collectives)
+# ---------------------------------------------------------------------------
+
+def test_transport_parity_8dev(run_prog):
+    out = run_prog(TRANSPORT_PROG)
+    assert "FAIL" not in out
+
+
+def test_hierarchical_end_to_end_on_node_mesh():
+    """Real Trainer runs on the harness's 2-axis ("node","local") mesh:
+    the hierarchical transport must reproduce the fused transport's loss
+    trajectory EXACTLY (bitwise param parity implies bitwise losses)."""
+    from harness import run_cluster
+
+    spec = dict(arch="paper-lstm", optimizer="rgc", steps=6,
+                nodes=2, density=0.01)
+    hier = run_cluster(dict(spec, transport="hierarchical"), devices=8)
+    fused = run_cluster(dict(spec, transport="fused_allgather"), devices=8)
+    assert hier["num_devices"] == 8
+    assert hier["losses"] == fused["losses"]
+    assert hier["held_loss"] == fused["held_loss"]

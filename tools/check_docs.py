@@ -1,0 +1,68 @@
+"""Docs CI checks (run from the repo root):
+
+  1. every relative markdown link in README.md and docs/*.md resolves to
+     an existing file/directory;
+  2. every registry-registered component name (compressors, transports,
+     dispatch policies, corrections — aliases included) appears in
+     docs/spec_grammar.md.
+
+Usage: PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def check_links() -> list[str]:
+    errors = []
+    pages = [os.path.join(ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    for page in pages:
+        with open(page) as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            path = os.path.normpath(
+                os.path.join(os.path.dirname(page), target.split("#")[0]))
+            if not os.path.exists(path):
+                rel = os.path.relpath(page, ROOT)
+                errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def check_spec_grammar() -> list[str]:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    import repro.core  # noqa: F401 (triggers all registrations)
+    from repro.core import registry
+
+    with open(os.path.join(ROOT, "docs", "spec_grammar.md")) as f:
+        grammar = f.read()
+    errors = []
+    for kind in (registry.COMPRESSOR, registry.TRANSPORT,
+                 registry.DISPATCH_POLICY, registry.CORRECTION):
+        for name in registry.names(kind):
+            if f"`{name}`" not in grammar:
+                errors.append(
+                    f"docs/spec_grammar.md: missing {kind} `{name}`")
+    return errors
+
+
+def main() -> None:
+    errors = check_links() + check_spec_grammar()
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        sys.exit(1)
+    print("OK docs: links resolve, spec grammar covers the registry")
+
+
+if __name__ == "__main__":
+    main()
