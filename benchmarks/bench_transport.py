@@ -2,10 +2,23 @@
 
 Runs ``GradientSync.update`` EAGERLY (op-by-op, no jit) with a
 ``WallClockTimer`` threaded through the pipeline and the transport, so
-every stage of the paper's decomposition — mask (residual accumulation +
-state masking), select, pack, transfer, unpack — is timed with a device
-barrier, per transport backend. This replaces fig10's artificial
+every stage of the paper's decomposition — accumulate + mask (Fig 10's
+"mask" bar, split), select, pack, transfer, unpack — is timed with a
+device barrier, per transport backend. This replaces fig10's artificial
 stage loop with the exact code path the trainer runs.
+
+Two comparison axes:
+
+* ``per_transport`` — the §5.3/§5.4 collective backends, measured on the
+  historical PER-LEAF pipeline (``fuse_leaves=False``) so collective
+  counts stay a function of the leaf set;
+* ``arena_vs_per_leaf`` — the flat residual arenas (``fuse_leaves``, the
+  default) against that per-leaf baseline on the fused transport:
+  per-stage wall time, ``dispatch_<stage>`` fused-operation counts and
+  collective/message counts. The claim asserts encode the arena
+  contract: select/mask/pack dispatches drop from O(leaves) to
+  O(arenas), collectives never increase, and fused mask+select+pack wall
+  time is no worse than per-leaf.
 
 Single-process eager execution means ``sync_axes=()`` (p=1): the
 ``transfer`` stage measures the backend's buffer plumbing (concat/split,
@@ -60,16 +73,19 @@ def make_tree(sizes: dict[str, int]):
 
 
 def measure_transport(name: str, params, grads, *, iters: int,
-                      bucket_bytes: int) -> dict:
+                      bucket_bytes: int, fuse_leaves: bool = False) -> dict:
     """Per-stage wall time of eager ``GradientSync.update`` steps.
 
     Built through the trainer's ``make_gradient_sync`` (mesh=None ->
     ``sync_axes=()``) so the measured pipeline is exactly what a
     TrainConfig with this transport would run, timer hook included.
+    ``fuse_leaves=False`` is the per-leaf baseline; True measures the
+    flat-arena pipeline.
     """
     timer = WallClockTimer()
     tc = TrainConfig(optimizer="rgc", transport=name, density=DENSITY,
-                     momentum=0.9, bucket_bytes=bucket_bytes)
+                     momentum=0.9, bucket_bytes=bucket_bytes,
+                     fuse_leaves=fuse_leaves)
     sync = make_gradient_sync(tc, None, timer=timer)
     state = sync.init(params)
     # warmup step (allocator, first-touch) outside the measurement
@@ -117,6 +133,40 @@ def overlap_report(m_elems: int, t_compute: float, net=PIZ_DAINT) -> dict:
     return {"t_compute_s": t_compute, "net": net.name, "per_p": per_p}
 
 
+FUSED_STAGES = ("mask", "select", "pack")     # the O(arenas) claim set
+
+
+def arena_vs_per_leaf(params, grads, *, iters: int,
+                      bucket_bytes: int) -> dict:
+    """Flat arenas vs per-leaf pipeline on the fused transport.
+
+    Returns per-mode stage summaries plus the dispatch/collective count
+    comparison the tier-2 CI asserts on.
+    """
+    modes = {}
+    for label, fuse in (("per_leaf", False), ("arena", True)):
+        modes[label] = measure_transport(
+            "fused_allgather", params, grads, iters=iters,
+            bucket_bytes=bucket_bytes, fuse_leaves=fuse)
+
+    def fused_wall(mode):
+        return sum(modes[mode]["stages"][s]["total_s"]
+                   for s in FUSED_STAGES)
+
+    cmp = {
+        "dispatch_counts": {
+            mode: {k: v for k, v in modes[mode]["counts"].items()
+                   if k.startswith("dispatch_")}
+            for mode in modes},
+        "collectives": {m: modes[m]["counts"].get("collectives", 0)
+                        for m in modes},
+        "messages": {m: modes[m]["counts"].get("messages", 0)
+                     for m in modes},
+        "fused_stage_wall_s": {m: fused_wall(m) for m in modes},
+    }
+    return {"modes": modes, "comparison": cmp}
+
+
 def main(quick: bool = False) -> dict:
     sizes = QUICK_TREE if quick else FULL_TREE
     iters = 2 if quick else 5
@@ -140,6 +190,21 @@ def main(quick: bool = False) -> dict:
             print(f"{name},{stage},{s['mean_ms']:.3f},{s['share']:.3f},"
                   f"{s['calls']}")
 
+    arena_cmp = arena_vs_per_leaf(params, grads, iters=iters,
+                                  bucket_bytes=bucket_bytes)
+    cmp = arena_cmp["comparison"]
+    print("arena_vs_per_leaf,metric,per_leaf,arena")
+    for stage in ("accumulate",) + FUSED_STAGES:
+        key = f"dispatch_{stage}"
+        print(f"arena_vs_per_leaf,{key},"
+              f"{cmp['dispatch_counts']['per_leaf'].get(key, 0)},"
+              f"{cmp['dispatch_counts']['arena'].get(key, 0)}")
+    print(f"arena_vs_per_leaf,collectives,{cmp['collectives']['per_leaf']},"
+          f"{cmp['collectives']['arena']}")
+    print(f"arena_vs_per_leaf,mask+select+pack_s,"
+          f"{cmp['fused_stage_wall_s']['per_leaf']:.4f},"
+          f"{cmp['fused_stage_wall_s']['arena']:.4f}")
+
     predicted = {}
     for net in (PIZ_DAINT, TPU_V5E):
         predicted[net.name] = {
@@ -155,6 +220,8 @@ def main(quick: bool = False) -> dict:
                  "total_mb": m_total * 4 / 2**20, "density": DENSITY,
                  "bucket_bytes": bucket_bytes},
         "per_transport": per_transport,
+        "arena_vs_per_leaf": arena_cmp,
+        "dispatch_counts": cmp["dispatch_counts"],
         "predicted": predicted,
         "overlap": overlap,
     }
@@ -166,7 +233,8 @@ def main(quick: bool = False) -> dict:
     # claims: every sparse transport exercises the full stage decomposition
     for name in TRANSPORTS:
         stages = per_transport[name]["stages"]
-        for stage in ("mask", "select", "pack", "transfer", "unpack"):
+        for stage in ("accumulate", "mask", "select", "pack", "transfer",
+                      "unpack"):
             assert stage in stages and stages[stage]["total_s"] > 0, \
                 f"{name} missing stage {stage}"
     # bucketing actually bucketed (several collectives per step), while
@@ -181,8 +249,26 @@ def main(quick: bool = False) -> dict:
     # selection dominates pack at p=1 (pack is a concat; select is a scan)
     fused = per_transport["fused_allgather"]["stages"]
     assert fused["select"]["total_s"] > fused["pack"]["total_s"]
+
+    # flat-arena claims (the tier-2 CI gate): select/mask/pack fused
+    # dispatches drop from O(leaves) to O(arenas) — strictly fewer — with
+    # no more collectives, and the fused stages' wall time is no worse
+    for stage in FUSED_STAGES:
+        key = f"dispatch_{stage}"
+        assert cmp["dispatch_counts"]["arena"][key] \
+            < cmp["dispatch_counts"]["per_leaf"][key], \
+            f"arena did not reduce {key}"
+    assert cmp["collectives"]["arena"] <= cmp["collectives"]["per_leaf"]
+    assert cmp["messages"]["arena"] < cmp["messages"]["per_leaf"]
+    # wall time: the dispatch asserts above are the deterministic
+    # O(arenas) gate; the timing check keeps a noise margin so a loaded
+    # CI runner cannot flake it (exact numbers ride in the JSON)
+    assert cmp["fused_stage_wall_s"]["arena"] \
+        <= 1.2 * cmp["fused_stage_wall_s"]["per_leaf"], \
+        "arena mask+select+pack wall time regressed vs per-leaf"
     print("claims: OK (all stages measured on the real pipeline; "
-          "bucketed>1 buckets; fused=1 collective/step)")
+          "bucketed>1 buckets; fused=1 collective/step; arena "
+          "mask/select/pack dispatches O(arenas) and no slower)")
     return report
 
 

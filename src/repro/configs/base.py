@@ -153,3 +153,20 @@ class TrainConfig:
     local_clip: float | None = None
     seed: int = 0
     residual_dtype: str = "f32"     # f32 | bf16 (large-model memory lever)
+    # Flat residual arenas (repro.core.arena): coalesce same-dtype sparse
+    # leaves into contiguous f32 arenas so the accumulate/select/mask/pack
+    # stages each run once per ARENA instead of once per leaf — O(arenas)
+    # fused kernel dispatches with bitwise-identical params/state.
+    # Selection stays segmented (each leaf keeps its own k). Disable to
+    # get the historical per-leaf pipeline (benchmark baseline).
+    fuse_leaves: bool = True
+    # Also fuse residual accumulation into one single-launch arena pass
+    # (residual-update + block-stats kernel). Off by default: XLA may
+    # FMA-contract the momentum product differently than the per-leaf
+    # graph (<= 1 ulp drift; exact when momentum == weight_decay == 0),
+    # so the default keeps accumulation on the bitwise per-leaf graph.
+    fuse_accumulate: bool = False
+    # Selection-kernel backend for trimmed_topk / threshold_bsearch:
+    # "jnp" (pure-XLA selectors) or "pallas" (the TPU kernels;
+    # auto-compiled on TPU, interpreted elsewhere).
+    backend: str = "jnp"

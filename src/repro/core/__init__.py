@@ -4,6 +4,9 @@ Layering:
   * ``registry``      — string-addressable component registry
   * ``api``           — ``Compressor`` / ``Transport`` / ``DispatchPolicy``
                         / ``Correction`` protocols
+  * ``arena``         — flat residual arenas: coalesced same-dtype slot
+                        layout + gather/scatter views for the fused
+                        select/mask/pack path (``fuse_leaves``)
   * ``compressors``   — dense / exact_topk / trimmed_topk /
                         threshold_bsearch / quantized(inner)
   * ``correction``    — momentum / factor_masking / local_clip / warmup

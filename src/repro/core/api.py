@@ -26,9 +26,12 @@ four swappable protocols, each string-addressable via
 
 ``StageTimer``
     Stage instrumentation hook threaded through ``GradientSync.update``
-    and the transports: each pipeline stage (``mask`` / ``select`` /
-    ``pack`` / ``transfer`` / ``unpack`` — Fig 10's decomposition) runs
-    inside ``timer.stage(name, thunk)``. ``repro.core.instrument`` ships
+    and the transports: each pipeline stage (``accumulate`` / ``select``
+    / ``mask`` / ``pack`` / ``transfer`` / ``unpack`` — Fig 10's
+    decomposition with the paper's "mask" bar split) runs inside
+    ``timer.stage(name, thunk)``; ``timer.count`` records
+    ``dispatch_<stage>`` fused-operation launches and transport
+    collective/message counts. ``repro.core.instrument`` ships
     ``NullTimer`` (free, trace-safe default) and ``WallClockTimer``
     (barriered wall-clock sampling for eager benchmark runs).
 
@@ -65,7 +68,14 @@ from .selection import Selected
 
 @runtime_checkable
 class Compressor(Protocol):
-    """Per-leaf compression: residual vector -> sparse communication set."""
+    """Per-leaf compression: residual vector -> sparse communication set.
+
+    Compressors MAY additionally set ``supports_segmented = True`` and
+    provide ``compress_segments(arena2d, geometry, states, stats)`` —
+    the same selection over every slot of a flat residual arena at once
+    (``repro.core.arena``); ``GradientSync`` fuses only leaves whose
+    compressor does, and falls back per leaf otherwise.
+    """
 
     name: str
     quantized: bool      # wire payload is (count, indices, mean) if True
@@ -141,7 +151,14 @@ class Transport(Protocol):
 
 @runtime_checkable
 class DispatchPolicy(Protocol):
-    """Per-leaf compressor choice (the §5.5 method dispatch, pluggable)."""
+    """Per-leaf compressor choice (the §5.5 method dispatch, pluggable).
+
+    ``compressor_for`` receives the RAW gradient leaf (pre-correction, so
+    byte-size dispatch sees the parameter's true storage dtype) and must
+    depend only on its path/shape/dtype — the decision is cached per
+    (treedef, leaf signature, density) and leaves are tracers under jit,
+    so value-dependent dispatch was never expressible anyway.
+    """
 
     def compressor_for(self, path: str, leaf: jax.Array) -> str:
         """Registered compressor name for this leaf ("dense" = allreduce)."""

@@ -1,0 +1,223 @@
+"""Flat residual arenas: coalesced storage views for the sparse sync path.
+
+RedSync's cost decomposition (§5.2–§5.5, Fig 10) shows selection/packing
+overhead — not just wire time — eroding compression gains, and the DGC /
+gradient-compression-systems literature pins the culprit: running the
+mask → select → pack pipeline **once per tensor** costs O(leaves) kernel
+launches and per-leaf intermediates per step. This module provides the
+layout half of the fix: all sparse-path leaves of the same dtype and
+selection algorithm are coalesced into a small number of contiguous f32
+*arenas*, so each pipeline stage runs once per arena while selection
+stays *segmented* (each leaf keeps its own ``k_i``, selected within its
+own segment — the communicated set is bitwise identical to the per-leaf
+path; see ``repro.kernels.segmented``).
+
+Layout invariants (property-tested in tests/test_arena.py):
+
+* every slot's ``offset`` is ``ARENA_BLOCK``-aligned and slots never
+  overlap: slot ``i`` occupies ``[offset, offset + padded)`` with
+  ``padded = ceil(size / ARENA_BLOCK) * ARENA_BLOCK``;
+* the inter-slot padding is zero-filled, so a slot's padded 2-D view
+  ``[nblocks, ARENA_BLOCK]`` is bit-for-bit the same array the per-leaf
+  Pallas/jnp selectors build for that leaf on its own (this is what makes
+  segmented block statistics reproduce per-leaf statistics BITWISE);
+* ``gather`` then ``scatter`` round-trips leaf values exactly;
+* one arena never mixes gradient dtypes or selection algorithms.
+
+The block granule matches ``kernels.ops.DEFAULT_BLOCK`` and
+``selection.STATS_BLOCK`` — one constant, three views of it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sync as sync_lib
+from .selection import STATS_BLOCK, Selected
+
+ARENA_BLOCK = STATS_BLOCK      # element alignment of arena slots
+
+
+def padded_size(n: int, block: int = ARENA_BLOCK) -> int:
+    return max(1, -(-n // block)) * block
+
+
+@dataclass(frozen=True)
+class Slot:
+    """One leaf's segment of an arena (all static trace-time metadata)."""
+
+    leaf: int          # position in the flattened gradient tree
+    path: str
+    offset: int        # element offset into the arena (ARENA_BLOCK-aligned)
+    size: int          # true element count
+    padded: int        # size rounded up to ARENA_BLOCK
+    row0: int          # first row of the arena's [nblocks, ARENA_BLOCK] view
+    k: int             # per-leaf selection target
+    capacity: int      # message capacity (compressor.capacity(k))
+    msg_offset: int    # element offset into the arena's wire message
+    msg_len: int       # sync.message_len(capacity, quantized)
+
+    @property
+    def nblocks(self) -> int:
+        return self.padded // ARENA_BLOCK
+
+    @property
+    def rows(self) -> tuple[int, int]:
+        return self.row0, self.row0 + self.nblocks
+
+
+@dataclass(frozen=True)
+class SegmentGeometry:
+    """Per-block segment maps the segmented kernels consume (numpy, static).
+
+    ``block_seg[b]`` is the slot ordinal owning arena row ``b``;
+    ``block_base[b]`` is that row's first LOCAL element index within its
+    slot; ``block_size[b]`` is the owning slot's true size (the bounds
+    check / padding sentinel — identical to the per-leaf kernels'
+    ``total``).
+    """
+
+    block: int
+    n_seg: int
+    nblocks: int
+    block_seg: np.ndarray    # [nblocks] i32
+    block_base: np.ndarray   # [nblocks] i32
+    block_size: np.ndarray   # [nblocks] i32
+    seg_sizes: tuple[int, ...]
+    seg_ks: tuple[int, ...]
+    seg_rows: tuple[tuple[int, int], ...]
+
+
+@dataclass(frozen=True)
+class ArenaGroup:
+    """A contiguous f32 arena over same-dtype, same-compressor leaves."""
+
+    aid: int
+    compressor: str               # registered compressor name
+    dtype: str                    # gradient dtype the arena coalesces
+    slots: tuple[Slot, ...]
+
+    @property
+    def total(self) -> int:
+        last = self.slots[-1]
+        return last.offset + last.padded
+
+    @property
+    def nblocks(self) -> int:
+        return self.total // ARENA_BLOCK
+
+    @property
+    def msg_total(self) -> int:
+        last = self.slots[-1]
+        return last.msg_offset + last.msg_len
+
+    @cached_property
+    def geometry(self) -> SegmentGeometry:
+        seg = np.empty(self.nblocks, np.int32)
+        base = np.empty(self.nblocks, np.int32)
+        size = np.empty(self.nblocks, np.int32)
+        for s_ord, slot in enumerate(self.slots):
+            r0, r1 = slot.rows
+            seg[r0:r1] = s_ord
+            base[r0:r1] = (np.arange(slot.nblocks, dtype=np.int32)
+                           * ARENA_BLOCK)
+            size[r0:r1] = slot.size
+        return SegmentGeometry(
+            block=ARENA_BLOCK, n_seg=len(self.slots), nblocks=self.nblocks,
+            block_seg=seg, block_base=base, block_size=size,
+            seg_sizes=tuple(s.size for s in self.slots),
+            seg_ks=tuple(s.k for s in self.slots),
+            seg_rows=tuple(s.rows for s in self.slots))
+
+
+def build_group(aid: int, compressor: str, dtype: str,
+                leaves: Sequence[tuple[int, str, int, int, int, int]]
+                ) -> ArenaGroup:
+    """Lay out one arena. ``leaves`` holds per-slot
+    ``(leaf_index, path, size, k, capacity, msg_len)`` in tree order."""
+    slots = []
+    off = row = moff = 0
+    for leaf, path, size, k, capacity, msg_len in leaves:
+        pad = padded_size(size)
+        slots.append(Slot(leaf=leaf, path=path, offset=off, size=size,
+                          padded=pad, row0=row, k=k, capacity=capacity,
+                          msg_offset=moff, msg_len=msg_len))
+        off += pad
+        row += pad // ARENA_BLOCK
+        moff += msg_len
+    return ArenaGroup(aid=aid, compressor=compressor, dtype=dtype,
+                      slots=tuple(slots))
+
+
+# -- gather / scatter views -------------------------------------------------
+
+def gather(group: ArenaGroup, arrays: Sequence[Any]) -> jax.Array:
+    """Leaf arrays (indexed by tree position) -> [nblocks, ARENA_BLOCK] f32.
+
+    Each slot is flattened, upcast to f32 and zero-padded to its padded
+    extent — bit-for-bit the 2-D view the per-leaf selectors build.
+    """
+    pieces = []
+    for slot in group.slots:
+        a = arrays[slot.leaf].reshape(-1).astype(jnp.float32)
+        pieces.append(jnp.pad(a, (0, slot.padded - slot.size)))
+    return jnp.concatenate(pieces).reshape(group.nblocks, ARENA_BLOCK)
+
+
+def scatter(group: ArenaGroup, arena2d: jax.Array) -> dict[int, jax.Array]:
+    """Arena view -> {leaf_index: flat f32[size]} (inverse of ``gather``
+    up to the zero padding, which is dropped)."""
+    flat = arena2d.reshape(-1)
+    return {slot.leaf: flat[slot.offset:slot.offset + slot.size]
+            for slot in group.slots}
+
+
+def communicated_indices(group: ArenaGroup,
+                         selected: Sequence[Selected]) -> jax.Array:
+    """Slot-local selected indices -> one arena-global index vector.
+
+    Padding sentinels (local index == slot size) are mapped past the
+    arena's end so a single ``mode="drop"`` scatter clears every slot's
+    communicated coordinates without touching a neighbour's padding.
+    """
+    total = group.total
+    out = []
+    for slot, sel in zip(group.slots, selected):
+        out.append(jnp.where(sel.indices < slot.size,
+                             sel.indices + slot.offset, total))
+    return jnp.concatenate(out)
+
+
+def mask_arena(arena2d: jax.Array, global_idx: jax.Array) -> jax.Array:
+    """Clear the communicated coordinates of one arena (Alg 4 l.21-23,
+    once per arena instead of once per leaf)."""
+    flat = arena2d.reshape(-1)
+    return flat.at[global_idx].set(0.0, mode="drop").reshape(arena2d.shape)
+
+
+# -- wire format ------------------------------------------------------------
+
+def pack_group(group: ArenaGroup, selected: Sequence[Selected]) -> jax.Array:
+    """All slot messages -> ONE packed wire buffer for the transport.
+
+    The buffer is the slot-order concatenation of exactly the per-leaf
+    ``sync.pack`` messages (``sync.pack_pieces`` owns the layout), so
+    gathered bytes split per slot are bitwise what the per-leaf path
+    transfers. One concatenate replaces O(leaves) pack dispatches.
+    """
+    pieces = []
+    for sel in selected:
+        pieces.extend(sync_lib.pack_pieces(sel, quantized=False))
+    return jnp.concatenate(pieces)
+
+
+def split_message(group: ArenaGroup, gathered: jax.Array
+                  ) -> list[jax.Array]:
+    """[workers, msg_total] gathered arena buffer -> per-slot segments."""
+    return [gathered[:, s.msg_offset:s.msg_offset + s.msg_len]
+            for s in group.slots]

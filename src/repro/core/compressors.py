@@ -27,10 +27,20 @@ from .selection import Selected
 
 
 class _Base:
-    """Shared init/decompress; subclasses define capacity + compress."""
+    """Shared init/decompress; subclasses define capacity + compress.
+
+    Compressors with a segmented implementation (``supports_segmented``)
+    additionally expose ``compress_segments``: Algorithm 2/3 over every
+    slot of a flat residual arena at once (``repro.core.arena`` /
+    ``repro.kernels.segmented``), bitwise identical to calling
+    ``compress`` per leaf. Leaves whose compressor lacks one (exact_topk,
+    quantized wrappers, custom compressors) simply stay on the per-leaf
+    path when arenas are enabled.
+    """
 
     name = "?"
     quantized = False
+    supports_segmented = False
 
     def init_leaf(self, param: jax.Array, *, momentum: bool,
                   residual_dtype: Any = jnp.float32) -> LeafState:
@@ -84,6 +94,7 @@ class TrimmedTopK(_Base):
     """Alg 2: statistics-guided trimming, then top-k over survivors."""
 
     name = "trimmed_topk"
+    supports_segmented = True
 
     def __init__(self, backend: str = "jnp", eps: float = 0.2):
         self.backend = backend
@@ -99,6 +110,16 @@ class TrimmedTopK(_Base):
             return kops.trimmed_topk(flat_v, k), state
         return sel_lib.trimmed_topk(flat_v, k, self.eps), state
 
+    def compress_segments(self, x2d, geom, states, stats=None):
+        """Alg 2 over one arena; mirrors ``compress`` per backend (the
+        pallas per-leaf path uses the kernel-default eps)."""
+        from repro.kernels import segmented as kseg
+        use_pallas = self.backend == "pallas"
+        sel = kseg.trimmed_topk_segments(
+            x2d, geom, use_pallas=use_pallas, stats=stats,
+            **({} if use_pallas else {"eps": self.eps}))
+        return sel, list(states)
+
     def quant_select(self, flat_v: jax.Array, k: int,
                      phase: jax.Array) -> Selected:
         return sel_lib.trimmed_topk_quant(flat_v, k, phase, self.eps)
@@ -113,6 +134,7 @@ class ThresholdBSearch(_Base):
     """
 
     name = "threshold_bsearch"
+    supports_segmented = True
 
     def __init__(self, backend: str = "jnp", interval: int = 5,
                  eps: float = 1e-3):
@@ -143,6 +165,29 @@ class ThresholdBSearch(_Base):
         s, thr = jax.lax.cond(do_refresh, refresh, reuse, operand=None)
         return s, state._replace(threshold=thr,
                                  interval=state.interval + 1)
+
+    def compress_segments(self, x2d, geom, states, stats=None):
+        """Alg 3 over one arena; mirrors ``compress`` per backend: the
+        pallas path always re-searches (kernel defaults, interval
+        untouched), the jnp path applies §5.2.2 threshold reuse per
+        segment from the cached LeafState scalars."""
+        import jax.numpy as jnp_
+
+        from repro.kernels import segmented as kseg
+        if self.backend == "pallas":
+            sel, thr = kseg.threshold_bsearch_segments(
+                x2d, geom, use_pallas=True, stats=stats)
+            return sel, [st._replace(threshold=thr[i])
+                         for i, st in enumerate(states)]
+        intervals = jnp_.stack([st.interval for st in states])
+        cached = jnp_.stack([st.threshold for st in states])
+        refresh = (intervals % self.interval) == 0
+        sel, thr = kseg.threshold_bsearch_segments(
+            x2d, geom, eps=self.eps, use_pallas=False, stats=stats,
+            refresh=refresh, cached=cached)
+        return sel, [st._replace(threshold=thr[i],
+                                 interval=st.interval + 1)
+                     for i, st in enumerate(states)]
 
     def quant_select(self, flat_v: jax.Array, k: int,
                      phase: jax.Array) -> Selected:

@@ -49,7 +49,8 @@ import jax
 import jax.numpy as jnp
 
 from . import registry
-from .residual import LeafState, accumulate, local_clip_scale, mask_momentum
+from .residual import (LeafState, accumulate, local_clip_scale,
+                       mask_momentum, pinned_product)
 from .schedule import DGC_WARMUP, DensitySchedule
 
 
@@ -65,6 +66,29 @@ class CorrectionBase:
     # (LeafState.momentum); GradientSync allocates it when any correction
     # (or the dense-leaf momentum SGD) needs it.
     needs_momentum_buffer = False
+    # True if this correction's on_communicated is momentum factor
+    # masking: on the fused arena path the core clears the coalesced
+    # velocity arena once instead of folding per-leaf hooks.
+    arena_mask_momentum = False
+
+    def arena_coeffs(self) -> tuple[float, bool] | None:
+        """(momentum, nesterov) if this correction owns residual
+        accumulation in the fusable Alg 4 form; None = not an owner."""
+        return None
+
+    def arena_safe(self) -> bool:
+        """Whether the flat-arena fast path reproduces this correction
+        exactly. The default is structural: a correction that overrides
+        neither per-leaf hook is trivially safe; the built-ins that DO
+        override them (momentum, factor_masking) declare their arena
+        form via ``arena_coeffs`` / ``arena_mask_momentum`` and override
+        this to True. Custom corrections with bespoke per-leaf hooks
+        return False and ``GradientSync`` silently falls back to the
+        per-leaf path — correctness first, fusion second.
+        """
+        cls = type(self)
+        return (cls.accumulate is CorrectionBase.accumulate
+                and cls.on_communicated is CorrectionBase.on_communicated)
 
     def on_grads(self, grads: list[jax.Array], params: list[jax.Array],
                  num_workers: int) -> list[jax.Array]:
@@ -106,6 +130,7 @@ class MomentumCorrection(CorrectionBase):
 
     name = "momentum"
     needs_momentum_buffer = True
+    arena_mask_momentum = True
 
     def __init__(self, momentum: float = 0.9, nesterov: bool = False):
         self.momentum = momentum
@@ -118,15 +143,25 @@ class MomentumCorrection(CorrectionBase):
     def on_communicated(self, state, indices):
         return mask_momentum(state, indices)
 
+    def arena_coeffs(self):
+        return self.momentum, self.nesterov
+
+    def arena_safe(self):
+        return True
+
 
 class FactorMasking(CorrectionBase):
     """Standalone DGC momentum factor masking: clear U at communicated
     coordinates. No-op when the leaf carries no param-shaped velocity."""
 
     name = "factor_masking"
+    arena_mask_momentum = True
 
     def on_communicated(self, state, indices):
         return mask_momentum(state, indices)
+
+    def arena_safe(self):
+        return True
 
 
 class LocalClip(CorrectionBase):
@@ -140,9 +175,14 @@ class LocalClip(CorrectionBase):
         self.clip_norm = clip_norm
 
     def on_grads(self, grads, params, num_workers):
-        sq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads)
+        # order-pinned: the squared-norm reduction and the scaled
+        # gradient feed the residual adds of every leaf, so a
+        # graph-shape-dependent partial-sum order or fma(g, scale, .)
+        # contraction would break per-leaf <-> arena bitwise parity
+        from .selection import pinned_sum
+        sq = sum(pinned_sum(g.astype(jnp.float32) ** 2) for g in grads)
         scale = local_clip_scale(sq, self.clip_norm, num_workers)
-        return [g * scale for g in grads]
+        return [pinned_product(g, scale) for g in grads]
 
 
 class Warmup(CorrectionBase):

@@ -7,11 +7,21 @@ Optax-style transform built from three registry-addressable pieces:
     new_params, new_state = sync.update(grads, state, params, lr)
 
 ``update`` runs the paper's six stages per step — DGC local clipping →
-residual/momentum accumulation → per-leaf selection (``Compressor``) →
-packing + sparse allgather (``Transport``) → scatter-add decompression →
-SGD apply — with the per-leaf method choice owned by a ``DispatchPolicy``.
+residual/momentum accumulation → selection (``Compressor``) → packing +
+sparse allgather (``Transport``) → scatter-add decompression → SGD apply
+— with the per-leaf method choice owned by a ``DispatchPolicy``.
 ``density >= 1.0`` is the §5.7 dense-warm-up sentinel: every leaf takes
 the dense allreduce path regardless of policy.
+
+With ``fuse_leaves`` (default) the sparse path runs over FLAT RESIDUAL
+ARENAS (``repro.core.arena``): leaves sharing a gradient dtype and a
+segmented compressor coalesce into contiguous f32 arenas and the
+select / mask / pack stages each issue ONE fused operation per arena
+instead of one per leaf — O(arenas) dispatches for the Fig 10 overhead
+stages — while selection stays segmented per leaf, so the communicated
+set, params and optimizer state are bitwise identical to the per-leaf
+path. The static per-step plan (paths, dispatch, k targets, arena
+layout) is cached per (treedef, leaf signature, density).
 
 Like the legacy ``rgc_apply`` it replaces (now a shim over this), it must
 run inside a fully-manual shard_map region whose axis names include the
@@ -36,19 +46,43 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from . import arena
 from . import registry
 from .api import Compressor, Correction, DispatchPolicy, Transport
 from .compressors import _Base as _CompressorBase  # noqa: F401 (registration)
 from .correction import LocalClip, MomentumCorrection, split_corrections
 from .dispatch import FixedPolicy, SizeBasedPolicy
 from .instrument import NullTimer
-from .residual import LeafState, accumulate, mask_communicated
+from .residual import (LeafState, accumulate, accumulate_arena,
+                       mask_communicated)
+from .sync import message_len
 from .transport import FusedAllgather  # noqa: F401 (registration)
+
+
+class _StepPlan(NamedTuple):
+    """Static per-step dispatch plan, cached per (treedef, leaf signature,
+    density, all_dense) — paths, compressor choices, k targets and the
+    arena layout never change within a trace, so they are computed once
+    instead of per update call."""
+
+    paths: tuple[str, ...]
+    dense: tuple[int, ...]                              # dense-path leaves
+    sparse: tuple[tuple[int, Any, int], ...]            # per-leaf (i, comp, k)
+    groups: tuple[arena.ArenaGroup, ...]                # fused arenas
+    group_comps: tuple[Any, ...]                        # compressor per group
+
+
+def _by_leaf(group: arena.ArenaGroup, states: list,
+             fld: str) -> dict[int, Any]:
+    """Leaf-indexed view of per-slot state fields (what ``arena.gather``
+    consumes)."""
+    return {slot.leaf: getattr(st, fld)
+            for slot, st in zip(group.slots, states)}
 
 
 @dataclass
@@ -65,6 +99,23 @@ class GradientSync:
     quantize: bool = False
     no_quant_paths: tuple[str, ...] = ("lm_head", "embed")
     residual_dtype: Any = jnp.float32
+    # Flat residual arenas: coalesce same-dtype sparse leaves that share a
+    # segmented compressor into contiguous f32 arenas, so accumulate /
+    # select / mask / pack each run once per ARENA instead of once per
+    # leaf (O(arenas) fused dispatches; see repro.core.arena). Selection
+    # stays segmented per leaf — the communicated set, params and state
+    # are bitwise identical to the per-leaf path. Leaves without a
+    # segmented compressor (exact_topk, quantized) and pipelines with
+    # non-arena-safe custom corrections fall back per leaf automatically.
+    fuse_leaves: bool = True
+    # Also run residual accumulation as ONE fused pass per arena (the
+    # single-launch residual-update+stats kernel of kernels/segmented.py)
+    # instead of per leaf. Off by default: the momentum / weight-decay
+    # products may differ from the per-leaf graph by <= 1 ulp when XLA
+    # FMA-contracts one side, so this trades bitwise reproducibility vs
+    # the per-leaf path for one fewer HBM round-trip (exact when
+    # momentum == weight_decay == 0).
+    fuse_accumulate: bool = False
     # DGC corrections run ahead of any compressor, in order. Spec-named
     # corrections land here explicitly; the momentum / local_clip config
     # fields ALWAYS imply their corrections (those fields are the on/off
@@ -79,6 +130,7 @@ class GradientSync:
     # default; bench_transport swaps in a WallClockTimer for eager runs
     timer: Any = None
     _compressors: dict = field(default_factory=dict, repr=False)
+    _plans: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self) -> None:
         if self.timer is None:
@@ -90,6 +142,13 @@ class GradientSync:
         if self.momentum and "momentum" not in names:
             corr.append(MomentumCorrection(self.momentum, self.nesterov))
         self.corrections = tuple(corr)
+        # arenas only fuse pipelines whose corrections they reproduce
+        # exactly; a custom correction with bespoke per-leaf hooks drops
+        # the whole pipeline back to the per-leaf path (never silently
+        # changes results)
+        self._arena_ok = all(
+            getattr(c, "arena_safe", lambda: False)()
+            for c in self.corrections)
 
     # -- construction helpers ----------------------------------------------
 
@@ -159,6 +218,168 @@ class GradientSync:
                                       residual_dtype=self.residual_dtype))
         return jax.tree.unflatten(treedef, out)
 
+    # -- the per-step plan (cached; satellite of the arena refactor) --------
+
+    def _plan(self, grads: Any, treedef: Any, leaves_g: list,
+              density: float, all_dense: bool) -> _StepPlan:
+        """Resolve (and cache) the static dispatch plan for this step.
+
+        Paths, per-leaf compressor choices, ``k`` targets and the arena
+        layout depend only on the tree structure, leaf shapes/dtypes and
+        the density — all static per trace — so ``keystr`` /
+        ``compressor_for`` / ``ceil`` run once per (treedef, signature,
+        density, all_dense) instead of on every call.
+        """
+        sig = tuple((tuple(g.shape), str(g.dtype)) for g in leaves_g)
+        key = (treedef, sig, density, all_dense)
+        if key in self._plans:
+            return self._plans[key]
+
+        paths = [jax.tree_util.keystr(kp) for kp, _ in
+                 jax.tree_util.tree_flatten_with_path(grads)[0]]
+        dense: list[int] = []
+        sparse: list[tuple[int, Compressor, int]] = []
+        fusable: dict[tuple[str, str], list] = {}
+        for i, g in enumerate(leaves_g):
+            name = ("dense" if all_dense
+                    else self.policy.compressor_for(paths[i], g))
+            if name == "dense":
+                dense.append(i)
+                continue
+            k = max(1, int(math.ceil(density * g.size)))
+            comp = self._leaf_compressor(name, paths[i])
+            if (self.fuse_leaves and self._arena_ok
+                    and getattr(comp, "supports_segmented", False)
+                    and not comp.quantized):
+                cap = comp.capacity(k)
+                fusable.setdefault((comp.name, str(g.dtype)), []).append(
+                    (i, paths[i], int(g.size), k, cap,
+                     message_len(cap, False)))
+            else:
+                sparse.append((i, comp, k))
+
+        groups, group_comps = [], []
+        for aid, ((name, dtype), slots) in enumerate(fusable.items()):
+            groups.append(arena.build_group(aid, name, dtype, slots))
+            group_comps.append(self.compressor(name))
+
+        plan = _StepPlan(paths=tuple(paths), dense=tuple(dense),
+                         sparse=tuple(sparse), groups=tuple(groups),
+                         group_comps=tuple(group_comps))
+        self._plans[key] = plan
+        return plan
+
+    def _arena_coeffs(self) -> tuple[float, bool]:
+        """(momentum, nesterov) of the accumulation-owning correction —
+        mirrors ``_accumulate``'s first-owner-wins rule for arenas."""
+        for c in self.corrections:
+            coeffs = getattr(c, "arena_coeffs", lambda: None)()
+            if coeffs is not None:
+                return coeffs
+        return 0.0, False
+
+    def _update_group(self, group: arena.ArenaGroup, comp: Compressor,
+                      leaves_g: list, leaves_p: list, leaves_s: list,
+                      new_states: list) -> jax.Array:
+        """One fused arena step: accumulate -> gather -> segmented select
+        -> mask -> scatter state back; returns the packed arena message.
+        The select / mask / pack stages each issue ONE fused operation
+        for the whole arena.
+
+        Residual accumulation defaults to the per-leaf hook chain
+        (``_accumulate``) — its momentum product is the one piece of
+        float arithmetic whose XLA FMA-contraction decision depends on
+        the surrounding graph, so keeping the exact per-leaf subgraph is
+        what makes the fused path BITWISE identical under jit. With
+        ``fuse_accumulate`` the arena instead runs the single-pass fused
+        residual-update+stats kernel (one HBM round-trip, O(arenas)
+        dispatches) whose momentum product may differ from the per-leaf
+        graph by <= 1 ulp when XLA contracts one side to an FMA — exact
+        when ``momentum == 0`` and ``weight_decay == 0``.
+        """
+        timer = self.timer
+        geom = group.geometry
+        m, nesterov = self._arena_coeffs()
+        use_pallas = getattr(comp, "backend", "jnp") == "pallas"
+        mask_u = any(getattr(c, "arena_mask_momentum", False)
+                     for c in self.corrections)
+        need_u = self.uses_momentum_buffer and bool(m or mask_u)
+        rd = (None if self.residual_dtype == jnp.float32
+              else self.residual_dtype)
+
+        if self.fuse_accumulate:
+            def _acc():
+                g2d = arena.gather(group, leaves_g)
+                v2d = arena.gather(group, [s.residual for s in leaves_s])
+                u2d = (arena.gather(group,
+                                    [s.momentum for s in leaves_s])
+                       if need_u else None)
+                p2d = (arena.gather(group, leaves_p)
+                       if self.weight_decay else None)
+                if use_pallas:
+                    from repro.kernels import segmented as kseg
+                    v2, u2, sums, maxs = kseg.seg_residual_update_stats(
+                        g2d, v2d, u2d if m else None, p2d, geom.block_seg,
+                        geom.n_seg, momentum=m, nesterov=nesterov,
+                        weight_decay=self.weight_decay, round_dtype=rd)
+                    stats = (kseg.seg_mean(sums, geom), maxs)
+                else:
+                    v2, u2 = accumulate_arena(
+                        g2d, v2d, u2d if m else None, p2d, momentum=m,
+                        nesterov=nesterov, weight_decay=self.weight_decay,
+                        residual_dtype=self.residual_dtype)
+                    stats = None
+                states = [leaves_s[slot.leaf] for slot in group.slots]
+                return v2, (u2 if u2 is not None else u2d), stats, states
+
+            timer.count("dispatch_accumulate")
+            v2d, u2d, stats, states_in = timer.stage("accumulate", _acc)
+        else:
+            def _acc():
+                states = []
+                for slot in group.slots:
+                    timer.count("dispatch_accumulate")
+                    states.append(self._accumulate(
+                        leaves_g[slot.leaf], leaves_p[slot.leaf],
+                        leaves_s[slot.leaf]))
+                v2d = arena.gather(group, _by_leaf(group, states,
+                                                   "residual"))
+                u2d = (arena.gather(group, _by_leaf(group, states,
+                                                    "momentum"))
+                       if need_u else None)
+                return v2d, u2d, None, states
+
+            v2d, u2d, stats, states_in = timer.stage("accumulate", _acc)
+
+        timer.count("dispatch_select")
+        selected, slot_states = timer.stage(
+            "select",
+            lambda: comp.compress_segments(v2d, geom, states_in, stats))
+
+        def _mask():
+            gidx = arena.communicated_indices(group, selected)
+            v = arena.mask_arena(v2d, gidx)
+            u = (arena.mask_arena(u2d, gidx)
+                 if (mask_u and need_u) else u2d)
+            return v, u
+
+        timer.count("dispatch_mask")
+        v2d_m, u2d_m = timer.stage("mask", _mask)
+
+        v_views = arena.scatter(group, v2d_m)
+        u_views = arena.scatter(group, u2d_m) if need_u else {}
+        for slot, st in zip(group.slots, slot_states):
+            shape = leaves_p[slot.leaf].shape
+            st = st._replace(residual=v_views[slot.leaf].reshape(shape)
+                             .astype(self.residual_dtype))
+            if need_u:
+                st = st._replace(momentum=u_views[slot.leaf].reshape(shape))
+            new_states[slot.leaf] = st
+
+        timer.count("dispatch_pack")
+        return timer.stage("pack",
+                           lambda: arena.pack_group(group, selected))
+
     def update(self, grads: Any, state: Any, params: Any, lr: jax.Array,
                *, density: float | None = None) -> tuple[Any, Any]:
         """One synchronized step. Returns (new_params, new_state)."""
@@ -166,42 +387,39 @@ class GradientSync:
         leaves_g, treedef = jax.tree.flatten(grads)
         leaves_p = treedef.flatten_up_to(params)
         leaves_s = treedef.flatten_up_to(state)
-        paths = [jax.tree_util.keystr(kp)
-                 for kp, _ in jax.tree_util.tree_flatten_with_path(grads)[0]]
         n_workers = self.transport.num_workers()
+
+        # density == 1.0 sentinel: RedSync dense warm-up (§5.7)
+        all_dense = density >= 1.0
+        plan = self._plan(grads, treedef, leaves_g, density, all_dense)
 
         # --- tree-level corrections (e.g. DGC local clipping, N^{-1/2}) ----
         for c in self.corrections:
             leaves_g = c.on_grads(leaves_g, leaves_p, n_workers)
-
-        # density == 1.0 sentinel: RedSync dense warm-up (§5.7)
-        all_dense = density >= 1.0
-
-        plan: list[tuple[int, Compressor | None, int]] = []  # (i, comp, k)
-        for i, g in enumerate(leaves_g):
-            name = ("dense" if all_dense
-                    else self.policy.compressor_for(paths[i], g))
-            if name == "dense":
-                plan.append((i, None, 0))
-                continue
-            k = max(1, int(math.ceil(density * g.size)))
-            plan.append((i, self._leaf_compressor(name, paths[i]), k))
 
         # --- pass 1: residual update + selection + message packing ---------
         # Each stage body routes through the StageTimer hook
         # (core.instrument): a free passthrough under jit/NullTimer, a
         # barriered wall-clock sample per stage when bench_transport runs
         # the pipeline eagerly (the measured Fig 10 decomposition).
+        # ``dispatch_<stage>`` counters record fused-operation launches:
+        # one per arena below, one per leaf in the fallback loop.
         timer = self.timer
         messages: list[jax.Array] = []
-        msg_meta: list[tuple[int, Compressor, int]] = []  # (leaf, comp, k)
+        msg_meta: list[tuple] = []
         new_states: list[LeafState] = list(leaves_s)
-        for i, comp, k in plan:
-            if comp is None:
-                continue
-            st = timer.stage("mask", lambda i=i: self._accumulate(
+
+        for group, comp in zip(plan.groups, plan.group_comps):
+            messages.append(self._update_group(
+                group, comp, leaves_g, leaves_p, leaves_s, new_states))
+            msg_meta.append(("arena", group, comp))
+
+        for i, comp, k in plan.sparse:
+            timer.count("dispatch_accumulate")
+            st = timer.stage("accumulate", lambda i=i: self._accumulate(
                 leaves_g[i], leaves_p[i], leaves_s[i]))
             flat_v = st.residual.reshape(-1).astype(jnp.float32)
+            timer.count("dispatch_select")
             selected, st = timer.stage(
                 "select", lambda f=flat_v, st=st: comp.compress(f, k, st))
 
@@ -210,11 +428,13 @@ class GradientSync:
                 for c in self.corrections:
                     st2 = c.on_communicated(st2, sel.indices)
                 return st2
+            timer.count("dispatch_mask")
             new_states[i] = timer.stage("mask", _mask)
+            timer.count("dispatch_pack")
             messages.append(timer.stage(
                 "pack",
                 lambda sel=selected: self.transport.pack(sel, comp.quantized)))
-            msg_meta.append((i, comp, k))
+            msg_meta.append(("leaf", i, comp, k))
 
         # --- pass 2: synchronization ---------------------------------------
         gathered = timer.stage(
@@ -222,17 +442,28 @@ class GradientSync:
 
         # --- pass 3: decompress + apply ------------------------------------
         new_params: list[jax.Array] = list(leaves_p)
-        for buf, (i, comp, k) in zip(gathered, msg_meta):
-            def _unpack(buf=buf, i=i, comp=comp, k=k):
-                g_sum = comp.decompress(buf, leaves_p[i].size, k)
-                upd = (g_sum / n_workers).reshape(leaves_p[i].shape)
-                return (leaves_p[i].astype(jnp.float32)
-                        - lr * upd).astype(leaves_p[i].dtype)
-            new_params[i] = timer.stage("unpack", _unpack)
 
-        for i, comp, _k in plan:
-            if comp is not None:
-                continue
+        def _apply(buf, i, comp, k):
+            g_sum = comp.decompress(buf, leaves_p[i].size, k)
+            upd = (g_sum / n_workers).reshape(leaves_p[i].shape)
+            return (leaves_p[i].astype(jnp.float32)
+                    - lr * upd).astype(leaves_p[i].dtype)
+
+        for buf, meta in zip(gathered, msg_meta):
+            if meta[0] == "arena":
+                _, group, comp = meta
+                slot_bufs = arena.split_message(group, buf)
+                for slot, sbuf in zip(group.slots, slot_bufs):
+                    new_params[slot.leaf] = timer.stage(
+                        "unpack", lambda b=sbuf, s=slot: _apply(
+                            b, s.leaf, comp, s.k))
+            else:
+                _, i, comp, k = meta
+                new_params[i] = timer.stage(
+                    "unpack", lambda b=buf, i=i, c=comp, k=k: _apply(
+                        b, i, c, k))
+
+        for i in plan.dense:
             g_mean = timer.stage(
                 "transfer",
                 lambda i=i: self.transport.allreduce_mean(leaves_g[i]))
@@ -271,6 +502,8 @@ def build_gradient_sync(
     dense_warmup: bool = False,
     bucket_bytes: int | None = None,
     intra_axis: str | None = None,
+    fuse_leaves: bool = True,
+    fuse_accumulate: bool = False,
     timer: Any = None,
     **compressor_params: Any,
 ) -> GradientSync:
@@ -298,6 +531,17 @@ def build_gradient_sync(
     factories ignore knobs they don't consume. ``timer`` is the
     ``StageTimer`` hook shared by the sync loop and the transport
     (``None`` -> ``NullTimer``).
+
+    ``fuse_leaves`` (default on) enables the flat residual arenas: the
+    select/mask/pack stages run once per same-dtype arena instead of once
+    per leaf, bitwise identical to the per-leaf path
+    (``repro.core.arena``). ``fuse_accumulate`` additionally fuses
+    residual accumulation into one arena pass (the single-launch
+    residual-update+stats kernel) at the cost of possible <= 1 ulp
+    momentum-product drift vs the per-leaf graph (XLA FMA contraction).
+    ``compressor_params`` may carry ``backend`` ("jnp" | "pallas") for
+    the selection kernels; the Pallas backend auto-detects
+    compiled-vs-interpreted per platform.
     """
     corr_names, base = split_corrections(optimizer)
     optimizer = base or "rgc"
@@ -357,6 +601,8 @@ def build_gradient_sync(
         quantize=quantize,
         no_quant_paths=tuple(no_quant_paths),
         residual_dtype=residual_dtype,
+        fuse_leaves=fuse_leaves,
+        fuse_accumulate=fuse_accumulate,
         corrections=corrections,
         compressor_params=dict(compressor_params),
         timer=timer,

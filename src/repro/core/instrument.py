@@ -1,12 +1,23 @@
 """Stage instrumentation for the sync pipeline (Fig 10's decomposition).
 
 ``GradientSync.update`` and the transports thread every pipeline stage
-through a ``StageTimer`` hook so the paper's Fig 10 time decomposition —
-``mask`` (residual/momentum accumulation + state masking), ``select``
-(communication-set selection), ``pack`` (wire-format packing),
-``transfer`` (the collectives, sparse and dense), ``unpack``
-(scatter-add decompression + parameter apply) — can be measured on the
-REAL pipeline instead of an artificial loop.
+through a ``StageTimer`` hook so the paper's Fig 10 time decomposition
+can be measured on the REAL pipeline instead of an artificial loop. The
+stage set refines Fig 10's by one split: the paper's ``mask`` bar merges
+residual/momentum accumulation with post-selection state masking — two
+different memory passes — so we time them separately as ``accumulate``
+(Alg 4 l.8-19: weight decay + momentum correction + residual add) and
+``mask`` (Alg 4 l.21-23: clearing V/U at communicated coordinates).
+Summing the two recovers the paper's ``mask`` bar. The rest match Fig
+10: ``select`` (communication-set selection), ``pack`` (wire-format
+packing), ``transfer`` (the collectives, sparse and dense), ``unpack``
+(scatter-add decompression + parameter apply).
+
+Alongside wall time, ``GradientSync`` counts ``dispatch_<stage>`` —
+fused-operation launches per stage (one per LEAF on the per-leaf path,
+one per ARENA with ``fuse_leaves``) — and the transports count
+``collectives`` / ``messages``; these are the O(leaves) → O(arenas)
+facts ``benchmarks/bench_transport.py`` asserts on.
 
 Two implementations:
 
@@ -30,8 +41,10 @@ from typing import Any, Callable
 
 import jax
 
-# Canonical stage order of one sync step (Fig 10's x-axis).
-STAGES = ("mask", "select", "pack", "transfer", "unpack")
+# Canonical stage order of one sync step (Fig 10's x-axis, with the
+# paper's "mask" bar split into accumulate + mask — sum them to compare
+# against Fig 10 directly). Pinned by tests/test_transport.py.
+STAGES = ("accumulate", "select", "mask", "pack", "transfer", "unpack")
 
 
 class NullTimer:

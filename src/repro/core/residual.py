@@ -20,6 +20,41 @@ import jax
 import jax.numpy as jnp
 
 
+def pinned_product(a, b: jax.Array) -> jax.Array:
+    """``a * b`` with separately-rounded (no-FMA) semantics, pinned.
+
+    XLA:CPU/TPU may contract a multiply feeding an add into a fused
+    multiply-add depending on which ops land in the same fusion — a
+    decision that varies with the SURROUNDING graph. That makes
+    ``m*U + g`` produce different last-ulp results in the per-leaf and
+    flat-arena pipelines (and between eager and jit), breaking bitwise
+    reproducibility of the residual state. Routing the product through a
+    single-trip ``while_loop`` materializes it at a computation boundary
+    no fusion (and therefore no contraction) can cross, pinning the
+    eager two-rounding semantics everywhere. The loop bound is derived
+    from the product's own bits (always 1, but not constant-foldable) so
+    the while-loop simplifier cannot inline the identity body; the body
+    is the identity, so the value is correct for ANY bound.
+    """
+    prod = a * b
+    ib = jax.lax.bitcast_convert_type(
+        prod.reshape(-1)[0].astype(jnp.float32), jnp.int32)
+    bound = jnp.minimum(jnp.int32(1),
+                        (ib & jnp.int32(0x3FFFFFFF)) + jnp.int32(1))
+
+    def body(c):
+        i, x = c
+        # value-preserving but NOT loop-invariant: an identity carry would
+        # be hoisted out of the while (reconnecting the multiply to its
+        # consumer and re-enabling contraction); the runtime-true select
+        # keeps the carry pinned inside the loop
+        keep = i < jnp.int32(1 << 30)
+        return i + jnp.int32(1), jnp.where(keep, x, jnp.zeros_like(x))
+
+    return jax.lax.while_loop(lambda c: c[0] < bound, body,
+                              (jnp.int32(0), prod))[1]
+
+
 class LeafState(NamedTuple):
     residual: jax.Array    # f32 param-shaped
     momentum: jax.Array    # f32 param-shaped
@@ -48,13 +83,18 @@ def accumulate(
     nesterov: bool,
     weight_decay: float,
 ) -> LeafState:
-    """Alg 4 lines 8–19: weight decay, momentum correction, residual add."""
+    """Alg 4 lines 8–19: weight decay, momentum correction, residual add.
+
+    The momentum / weight-decay products are contraction-pinned
+    (``pinned_product``) so the accumulated state is bitwise identical
+    whether this runs per leaf, per arena slot, eagerly or under jit.
+    """
     g = grad.astype(jnp.float32)
     if weight_decay:
-        g = g + weight_decay * param.astype(jnp.float32)
+        g = g + pinned_product(weight_decay, param.astype(jnp.float32))
     r = state.residual.astype(jnp.float32)
     if momentum:
-        u = momentum * state.momentum + g
+        u = pinned_product(momentum, state.momentum) + g
         v = r + u
         if nesterov:
             v = v + g
@@ -91,6 +131,43 @@ def mask_momentum(state: LeafState, indices: jax.Array) -> LeafState:
     flat_u = state.momentum.reshape(-1)
     u = flat_u.at[indices].set(0.0, mode="drop").reshape(state.momentum.shape)
     return state._replace(momentum=u)
+
+
+def accumulate_arena(
+    g2d: jax.Array,
+    v2d: jax.Array,
+    u2d: jax.Array | None,
+    p2d: jax.Array | None,
+    *,
+    momentum: float,
+    nesterov: bool,
+    weight_decay: float,
+    residual_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Alg 4 lines 8-19 over a whole residual arena (jnp twin of the
+    fused ``kernels.segmented.seg_residual_update_stats`` pass).
+
+    Elementwise math is exactly ``accumulate``'s, applied once per arena
+    instead of once per leaf; ``residual_dtype`` rounds V' through the
+    residual storage dtype so selection sees the same values the per-leaf
+    path reloads from its state buffer. ``u2d`` is required iff
+    ``momentum`` is nonzero, ``p2d`` iff ``weight_decay`` is nonzero.
+    Returns (V', U' or None).
+    """
+    g = g2d.astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * p2d.astype(jnp.float32)
+    if momentum:
+        u = momentum * u2d + g
+        v = v2d + u
+        if nesterov:
+            v = v + g
+    else:
+        u = None
+        v = v2d + g
+    if residual_dtype != jnp.float32:
+        v = v.astype(residual_dtype).astype(jnp.float32)
+    return v, u
 
 
 def local_clip_scale(grads_sq_sum: jax.Array, clip_norm: float,

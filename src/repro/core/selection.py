@@ -34,9 +34,85 @@ class Selected(NamedTuple):
     count: jax.Array     # i32[] true number of selected elements (<= cap)
 
 
+# Slot alignment granule of the flat residual arenas. Matches the Pallas
+# kernels' VMEM block (kernels.ops.DEFAULT_BLOCK) so that a slot's padded
+# 2-D view inside an arena is bit-for-bit the view the per-leaf kernels
+# build for that leaf on its own.
+STATS_BLOCK = 1024
+
+
+def pinned_sum(v: jax.Array) -> jax.Array:
+    """Sum with a PINNED floating-point summation tree (pairwise halving).
+
+    ``jnp.sum``'s partial-sum order is an XLA implementation detail — the
+    CPU backend may split one reduce into reduce-window chunks (or not)
+    depending on the surrounding fusion, so the same vector can sum to
+    last-ulp-different totals in differently-shaped graphs. That breaks
+    the flat-arena refactor's bitwise guarantee through the Alg 2/3 mean.
+    This sum zero-pads to a power of two and halves with ELEMENTWISE adds
+    — elementwise ops have no reduction order for XLA to choose, so the
+    addition tree is identical in every graph context.
+    """
+    flat = v.reshape(-1)
+    size = 1 << max(0, int(flat.size - 1).bit_length())
+    flat = jnp.pad(flat, (0, size - flat.size))
+    while flat.size > 1:
+        half = flat.size // 2
+        flat = flat[:half] + flat[half:]
+    return flat[0]
+
+
+def mean_of_sum(total: jax.Array, n: int) -> jax.Array:
+    """``total / n`` as a pinned multiply by the f32 reciprocal.
+
+    A literal division by a constant may be strength-reduced to a
+    reciprocal multiply under fast math in one graph shape and left as a
+    true division in another — a last-ulp lottery, like the FMA
+    contraction ``pinned_product`` guards against. Precomputing the f32
+    reciprocal in Python and pinning the multiply makes the mean a fixed
+    function of ``total`` everywhere. (``n < 2**24`` loses nothing; the
+    mean is a selection heuristic, not an accumulator.)
+    """
+    from .residual import pinned_product
+    return pinned_product(total, jnp.float32(1.0 / n))
+
+
 def _stats(ax: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """mean and max of a non-negative vector (|x|)."""
-    return jnp.mean(ax), jnp.max(ax)
+    """mean and max of a non-negative vector (|x|), order-pinned.
+
+    The mean's summation tree is pinned (``pinned_sum``) and the /n is a
+    pinned reciprocal multiply (``mean_of_sum``) so per-leaf and
+    segmented-arena selection see bitwise-identical statistics; max is
+    order-insensitive and stays a plain reduce.
+    """
+    return mean_of_sum(pinned_sum(ax), ax.size), jnp.max(ax)
+
+
+def threshold_at(mean: jax.Array, mx: jax.Array,
+                 ratio: jax.Array) -> jax.Array:
+    """The Alg 2/3 candidate threshold ``mean + ratio * (mx - mean)``.
+
+    The product is contraction-pinned (``residual.pinned_product``): XLA
+    would otherwise FMA-contract it in some graph shapes and not others,
+    and a last-ulp threshold difference between the per-leaf and
+    flat-arena pipelines eventually flips a boundary element of the
+    communication set. Shared by the jnp selectors here, the per-leaf
+    Pallas wrappers (kernels.ops) and the segmented-arena selectors
+    (kernels.segmented) — one definition, bitwise everywhere.
+    """
+    from .residual import pinned_product
+    return mean + pinned_product(ratio, mx - mean)
+
+
+def bisect_midpoint(l: jax.Array, r: jax.Array) -> jax.Array:
+    """``l + (r - l) / 2`` with the halving contraction-pinned.
+
+    XLA strength-reduces the ``/ 2.0`` to ``* 0.5`` (value-identical)
+    and may then FMA-contract it with the ``l +`` — graph-shape
+    dependent, like ``threshold_at``'s product. Same pin, same reason.
+    """
+    from .residual import pinned_product
+    return l + pinned_product(jnp.float32(0.5), r - l)
 
 
 def _pad_topk(x: jax.Array, score: jax.Array, k: int) -> Selected:
@@ -75,13 +151,13 @@ def trimmed_topk(x: jax.Array, k: int, eps: float = 0.2) -> Selected:
     def body(state):
         ratio, _ = state
         ratio = ratio - eps
-        thr = mean + ratio * (mx - mean)
+        thr = threshold_at(mean, mx, ratio)
         return ratio, jnp.sum(ax > thr)
 
     ratio0 = 1.0 - eps
-    nnz0 = jnp.sum(ax > mean + ratio0 * (mx - mean))
+    nnz0 = jnp.sum(ax > threshold_at(mean, mx, jnp.float32(ratio0)))
     ratio, _ = jax.lax.while_loop(cond, body, (jnp.float32(ratio0), nnz0))
-    thr = mean + ratio * (mx - mean)
+    thr = threshold_at(mean, mx, ratio)
     trimmed_score = jnp.where(ax > thr, ax, 0.0)
     return _pad_topk(x, trimmed_score, k)
 
@@ -112,8 +188,8 @@ def threshold_binary_search(
 
     def body(state):
         l, r, _ = state
-        ratio = l + (r - l) / 2.0
-        thr = mean + ratio * (mx - mean)
+        ratio = bisect_midpoint(l, r)
+        thr = threshold_at(mean, mx, ratio)
         nnz = jnp.sum(ax > thr)
         # nnz too small -> threshold too high -> move right bound down
         r = jnp.where(nnz < k, ratio, r)
@@ -123,8 +199,8 @@ def threshold_binary_search(
     l, r, _ = jax.lax.while_loop(
         cond, body, (jnp.float32(0.0), jnp.float32(1.0), jnp.int32(-1))
     )
-    ratio = l + (r - l) / 2.0
-    thr = mean + ratio * (mx - mean)
+    ratio = bisect_midpoint(l, r)
+    thr = threshold_at(mean, mx, ratio)
     if threshold is not None:  # pragma: no cover - convenience branch
         thr = threshold
     return threshold_filter(x, thr, capacity=2 * k), thr
@@ -175,12 +251,12 @@ def trimmed_topk_quant(
     def body(state):
         ratio, _ = state
         ratio = ratio - eps
-        return ratio, jnp.sum(score > mean + ratio * (mx - mean))
+        return ratio, jnp.sum(score > threshold_at(mean, mx, ratio))
 
     ratio0 = 1.0 - eps
-    nnz0 = jnp.sum(score > mean + ratio0 * (mx - mean))
+    nnz0 = jnp.sum(score > threshold_at(mean, mx, jnp.float32(ratio0)))
     ratio, _ = jax.lax.while_loop(cond, body, (jnp.float32(ratio0), nnz0))
-    thr = mean + ratio * (mx - mean)
+    thr = threshold_at(mean, mx, ratio)
     sel = _pad_topk(x, jnp.where(score > thr, score, 0.0), k)
     return _quantize(sel, x.size)
 
@@ -203,8 +279,8 @@ def threshold_binary_search_quant(
 
     def body(state):
         l, r, _ = state
-        ratio = l + (r - l) / 2.0
-        thr = mean + ratio * (mx - mean)
+        ratio = bisect_midpoint(l, r)
+        thr = threshold_at(mean, mx, ratio)
         nnz = jnp.sum(score > thr)
         r = jnp.where(nnz < k, ratio, r)
         l = jnp.where(nnz > 2 * k, ratio, l)
@@ -213,7 +289,7 @@ def threshold_binary_search_quant(
     l, r, _ = jax.lax.while_loop(
         cond, body, (jnp.float32(0.0), jnp.float32(1.0), jnp.int32(-1))
     )
-    thr = mean + (l + (r - l) / 2.0) * (mx - mean)
+    thr = threshold_at(mean, mx, bisect_midpoint(l, r))
     mask = score > thr
     nnz = jnp.sum(mask)
     (idx,) = jnp.nonzero(mask, size=2 * k, fill_value=x.size)

@@ -36,15 +36,23 @@ def message_len(capacity: int, quantized: bool) -> int:
     return 1 + capacity + (1 if quantized else capacity)
 
 
-def pack(sel: Selected, quantized: bool) -> jax.Array:
-    """Selected -> packed f32 wire message."""
+def pack_pieces(sel: Selected, quantized: bool) -> list[jax.Array]:
+    """The wire-format segments of one message, in order (the single
+    definition of the layout): ``[count | indices | payload]``. Callers
+    concatenate — ``pack`` for one message, ``arena.pack_group`` for a
+    whole arena's slot messages in one concatenate."""
     header = _i2f(sel.count[None])
     idx = _i2f(sel.indices)
     if quantized:
         denom = jnp.maximum(sel.count, 1).astype(jnp.float32)
         mean = (jnp.sum(sel.values) / denom)[None]
-        return jnp.concatenate([header, idx, mean])
-    return jnp.concatenate([header, idx, sel.values])
+        return [header, idx, mean]
+    return [header, idx, sel.values]
+
+
+def pack(sel: Selected, quantized: bool) -> jax.Array:
+    """Selected -> packed f32 wire message."""
+    return jnp.concatenate(pack_pieces(sel, quantized))
 
 
 def unpack_decompress(

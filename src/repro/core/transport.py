@@ -32,8 +32,13 @@ Five registered backends (§5.3/§5.4):
 
 All backends share the packed wire format of ``core.sync`` and the dense
 psum fallback for small leaves, and accept a ``StageTimer`` hook
-(``core.instrument``) for counter-grade facts (e.g. collectives per
-step). Outside a mesh (``sync_axes=()``) every collective degrades to the
+(``core.instrument``) for counter-grade facts (``collectives`` and
+``messages`` per step). Transports consume *messages*, not leaves: with
+``fuse_leaves`` the sync loop hands over ONE pre-packed buffer per
+residual arena (``core.arena.pack_group``) which feeds straight into the
+fusion/bucketing logic here — the per-leaf transport semantics are
+unchanged, there are simply O(arenas) messages instead of O(leaves).
+Outside a mesh (``sync_axes=()``) every collective degrades to the
 single-worker identity, which is what the CPU smoke tests run.
 """
 from __future__ import annotations
@@ -108,6 +113,7 @@ class FusedAllgather(_Base):
     def allgather(self, messages: list[jax.Array]) -> list[jax.Array]:
         if not messages:
             return []
+        self.timer.count("messages", len(messages))
         self.timer.count("collectives")
         return sync_lib.fused_allgather(messages, self.sync_axes)
 
@@ -127,6 +133,7 @@ class BucketedAllgather(_Base):
             return []
         nbytes = [int(m.shape[0]) * m.dtype.itemsize for m in messages]
         buckets = assign_buckets(nbytes, self.bucket_bytes)
+        self.timer.count("messages", len(messages))
         self.timer.count("buckets", len(buckets))
         self.timer.count("collectives", len(buckets))
         out: list[jax.Array | None] = [None] * len(messages)
@@ -171,6 +178,7 @@ class HierarchicalAllgather(_Base):
         # same §5.3 fusion as fused_allgather, then the two-level exchange
         lens = [int(m.shape[0]) for m in messages]
         buf = jax.numpy.concatenate(messages)
+        self.timer.count("messages", len(messages))
         self.timer.count("collectives", 2 if self.intra_axis else 1)
         gathered = sync_lib.hierarchical_allgather(
             buf, self.inter_axes, self.intra_axis, self.sync_axes)
@@ -181,6 +189,7 @@ class PerLeafAllgather(_Base):
     name = "per_leaf_allgather"
 
     def allgather(self, messages: list[jax.Array]) -> list[jax.Array]:
+        self.timer.count("messages", len(messages))
         self.timer.count("collectives", len(messages))
         return [sync_lib.sparse_allgather(m, self.sync_axes)
                 for m in messages]

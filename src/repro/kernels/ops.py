@@ -8,8 +8,12 @@ contract) but route the hot loops through the TPU kernels:
     threshold_binary_search = block_stats -> bisect loop(count_gt)
                              -> compact_gt -> first-2k filter
 
-``interpret`` defaults to True so the same code validates on CPU; on real
-TPU hardware pass interpret=False (kernels carry explicit BlockSpec tiling).
+``interpret`` defaults to None = backend auto-detection: compiled kernels
+on a TPU backend (the BlockSpec tiling is the lowering target),
+interpreter mode everywhere else (CPU tests, debugging). Pass an explicit
+bool to override either way. The auto default is what
+``compressor_params["backend"] = "pallas"`` threads through the
+compressor registry, so a TrainConfig needs no extra knob per platform.
 """
 from __future__ import annotations
 
@@ -19,7 +23,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.selection import Selected
+from repro.core.selection import (Selected, bisect_midpoint,
+                                  mean_of_sum, threshold_at)
 
 from .block_stats import abs_sum_max
 from .compact import compact_gt
@@ -27,6 +32,13 @@ from .residual_update import residual_update as _residual_update_kernel
 from .threshold_count import count_gt
 
 DEFAULT_BLOCK = 1024
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> interpret unless running on a real TPU backend."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
 
 
 def _to2d(x: jax.Array, block: int) -> tuple[jax.Array, int]:
@@ -44,16 +56,18 @@ def _bucket_cap(k: int, nb: int, block: int) -> int:
 
 
 def stats(x: jax.Array, *, block: int = DEFAULT_BLOCK,
-          interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+          interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
     """(mean(|x|), max(|x|)) via the fused reduction kernel."""
+    interpret = resolve_interpret(interpret)
     x2d, n = _to2d(x, block)
     s, m = abs_sum_max(x2d, interpret=interpret)
-    return s / n, m
+    return mean_of_sum(s, n), m
 
 
 def nnz_gt(x: jax.Array, threshold: jax.Array, *, block: int = DEFAULT_BLOCK,
-           interpret: bool = True) -> jax.Array:
+           interpret: bool | None = None) -> jax.Array:
     x2d, _ = _to2d(x, block)
+    interpret = resolve_interpret(interpret)
     return count_gt(x2d, threshold, interpret=interpret)
 
 
@@ -75,12 +89,13 @@ def _gather_topk_from_buckets(vals, idx, k: int, total: int,
 
 def trimmed_topk(x: jax.Array, k: int, *, eps: float = 0.2,
                  block: int = DEFAULT_BLOCK,
-                 interpret: bool = True) -> Selected:
+                 interpret: bool | None = None) -> Selected:
     """Algorithm 2 on the TPU kernels. capacity == k."""
+    interpret = resolve_interpret(interpret)
     x2d, n = _to2d(x, block)
     nb = x2d.shape[0]
     s, mx = abs_sum_max(x2d, interpret=interpret)
-    mean = s / n
+    mean = mean_of_sum(s, n)
 
     def cond(state):
         ratio, nnz = state
@@ -89,13 +104,13 @@ def trimmed_topk(x: jax.Array, k: int, *, eps: float = 0.2,
     def body(state):
         ratio, _ = state
         ratio = ratio - eps
-        thr = mean + ratio * (mx - mean)
+        thr = threshold_at(mean, mx, ratio)
         return ratio, count_gt(x2d, thr, interpret=interpret)
 
     r0 = jnp.float32(1.0 - eps)
-    nnz0 = count_gt(x2d, mean + r0 * (mx - mean), interpret=interpret)
+    nnz0 = count_gt(x2d, threshold_at(mean, mx, r0), interpret=interpret)
     ratio, _ = jax.lax.while_loop(cond, body, (r0, nnz0))
-    thr = mean + ratio * (mx - mean)
+    thr = threshold_at(mean, mx, ratio)
 
     cap = _bucket_cap(k, nb, block)
     vals, idx, counts = compact_gt(x2d, thr, cap, n, interpret=interpret)
@@ -121,12 +136,14 @@ def trimmed_topk(x: jax.Array, k: int, *, eps: float = 0.2,
 
 def threshold_binary_search(x: jax.Array, k: int, *, eps: float = 1e-3,
                             block: int = DEFAULT_BLOCK,
-                            interpret: bool = True) -> tuple[Selected, jax.Array]:
+                            interpret: bool | None = None
+                            ) -> tuple[Selected, jax.Array]:
     """Algorithm 3 on the TPU kernels. capacity == 2k; returns threshold."""
+    interpret = resolve_interpret(interpret)
     x2d, n = _to2d(x, block)
     nb = x2d.shape[0]
     s, mx = abs_sum_max(x2d, interpret=interpret)
-    mean = s / n
+    mean = mean_of_sum(s, n)
 
     def cond(state):
         l, r, nnz = state
@@ -135,8 +152,8 @@ def threshold_binary_search(x: jax.Array, k: int, *, eps: float = 1e-3,
 
     def body(state):
         l, r, _ = state
-        ratio = l + (r - l) / 2.0
-        thr = mean + ratio * (mx - mean)
+        ratio = bisect_midpoint(l, r)
+        thr = threshold_at(mean, mx, ratio)
         nnz = count_gt(x2d, thr, interpret=interpret)
         r = jnp.where(nnz < k, ratio, r)
         l = jnp.where(nnz > 2 * k, ratio, l)
@@ -144,7 +161,7 @@ def threshold_binary_search(x: jax.Array, k: int, *, eps: float = 1e-3,
 
     l, r, _ = jax.lax.while_loop(
         cond, body, (jnp.float32(0.0), jnp.float32(1.0), jnp.int32(-1)))
-    thr = mean + (l + (r - l) / 2.0) * (mx - mean)
+    thr = threshold_at(mean, mx, bisect_midpoint(l, r))
 
     nnz = count_gt(x2d, thr, interpret=interpret)
     cap = _bucket_cap(k, nb, block)
@@ -171,8 +188,10 @@ def threshold_binary_search(x: jax.Array, k: int, *, eps: float = 1e-3,
 def residual_update(grad: jax.Array, u: jax.Array, v: jax.Array, *,
                     momentum: float, nesterov: bool,
                     block: int = DEFAULT_BLOCK,
-                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+                    interpret: bool | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
     """Fused U/V update on arbitrary-shaped leaves."""
+    interpret = resolve_interpret(interpret)
     shape, n = grad.shape, grad.size
     g2, _ = _to2d(grad, block)
     u2, _ = _to2d(u, block)

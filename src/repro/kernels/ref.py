@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def abs_sum_max(x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -63,3 +64,121 @@ def residual_update(
     if nesterov:
         v_new = v_new + g
     return u_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Segmented twins (the flat-arena kernels of kernels/segmented.py)
+# ---------------------------------------------------------------------------
+
+def _seg_rows(block_seg) -> list[tuple[int, int]]:
+    """Contiguous [row0, row1) row range per segment ordinal."""
+    bs = np.asarray(block_seg)
+    starts = np.searchsorted(bs, np.arange(bs.max() + 1), side="left")
+    ends = np.searchsorted(bs, np.arange(bs.max() + 1), side="right")
+    return [(int(s), int(e)) for s, e in zip(starts, ends)]
+
+
+def seg_abs_sum_max(x2d: jax.Array, block_seg, block_size,
+                    n_seg: int) -> tuple[jax.Array, jax.Array]:
+    """Per-segment (sum|x|, max|x|) over the arena's [nb, block] rows.
+
+    Each segment's sum runs ``selection.pinned_sum`` over the slot's
+    TRUE-length flat vector (padding sliced off) — the exact pinned
+    summation tree ``selection._stats`` runs for that leaf on its own,
+    so the per-segment mean is bitwise the per-leaf mean in any graph
+    context. ``block_size`` carries the owning slot's true size per row.
+    """
+    from repro.core.selection import pinned_sum
+    ax = jnp.abs(x2d.astype(jnp.float32))
+    bsize = np.asarray(block_size)
+    sums, maxs = [], []
+    for r0, r1 in _seg_rows(block_seg):
+        seg = ax[r0:r1]
+        sums.append(pinned_sum(seg.reshape(-1)[:int(bsize[r0])]))
+        maxs.append(jnp.max(seg))
+    return jnp.stack(sums), jnp.stack(maxs)
+
+
+def seg_count_gt(x2d: jax.Array, block_seg, thresholds: jax.Array,
+                 n_seg: int) -> jax.Array:
+    """Per-segment nnz(|x| > thresholds[seg]) (integer — order-free)."""
+    seg = jnp.asarray(np.asarray(block_seg), jnp.int32)
+    thr_b = jnp.asarray(thresholds, jnp.float32)[seg]
+    cnt_b = jnp.sum(jnp.abs(x2d.astype(jnp.float32)) > thr_b[:, None],
+                    axis=1).astype(jnp.int32)
+    return jax.ops.segment_sum(cnt_b, seg, num_segments=n_seg)
+
+
+def seg_compact_gt(x2d: jax.Array, block_seg, block_base, block_size,
+                   thresholds: jax.Array, cap_per_block: int
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Block-bucketed compaction with per-segment thresholds.
+
+    Twin of ``segmented.seg_compact_gt``: per arena row, the first
+    ``cap_per_block`` elements with |x| > thr of the owning segment are
+    packed to the front; indices are slot-LOCAL with padding == the
+    slot's size; counts are pre-clamp survivor counts.
+    """
+    nb, block = x2d.shape
+    x = x2d.astype(jnp.float32)
+    seg = jnp.asarray(np.asarray(block_seg), jnp.int32)
+    base = jnp.asarray(np.asarray(block_base), jnp.int32)
+    size = jnp.asarray(np.asarray(block_size), jnp.int32)
+    thr_b = jnp.asarray(thresholds, jnp.float32)[seg]
+
+    lidx = base[:, None] + jnp.arange(block, dtype=jnp.int32)[None, :]
+    mask = (jnp.abs(x) > thr_b[:, None]) & (lidx < size[:, None])
+    cnts = jnp.sum(mask, axis=1).astype(jnp.int32)
+
+    cap = cap_per_block
+    pos = jnp.cumsum(mask, axis=1) - 1
+    live = mask & (pos < cap)
+    row = jnp.arange(nb)[:, None]
+    # scatter survivors into [nb, cap] buckets (+1 dump slot for the rest)
+    tgt = jnp.where(live, row * cap + pos, nb * cap).reshape(-1)
+    vals = jnp.zeros(nb * cap + 1, jnp.float32) \
+        .at[tgt].set(x.reshape(-1))[:nb * cap].reshape(nb, cap)
+    sentinel = jnp.broadcast_to(size[:, None], (nb, cap)).reshape(-1)
+    idx = jnp.concatenate([sentinel, jnp.zeros(1, jnp.int32)]) \
+        .at[tgt].set(lidx.reshape(-1))[:nb * cap].reshape(nb, cap)
+    return vals, idx.astype(jnp.int32), cnts
+
+
+def seg_residual_update_stats(
+    g2d: jax.Array,
+    v2d: jax.Array,
+    u2d: jax.Array | None,
+    p2d: jax.Array | None,
+    block_seg,
+    n_seg: int,
+    *,
+    momentum: float,
+    nesterov: bool,
+    weight_decay: float = 0.0,
+    round_dtype=None,
+) -> tuple[jax.Array, jax.Array | None, jax.Array, jax.Array]:
+    """Twin of the fused arena accumulate+stats pass (Alg 4 + Alg 2/3)."""
+    g = g2d.astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * p2d.astype(jnp.float32)
+    if momentum:
+        u_new, v_new = residual_update(g, u2d, v2d, momentum=momentum,
+                                       nesterov=nesterov)
+    else:
+        u_new, v_new = None, v2d + g
+    if round_dtype is not None:
+        v_new = v_new.astype(round_dtype).astype(jnp.float32)
+    sums, maxs = _plain_seg_abs_sum_max(v_new, block_seg, n_seg)
+    return v_new, u_new, sums, maxs
+
+
+def _plain_seg_abs_sum_max(x2d, block_seg, n_seg):
+    """Sequential-blockwise per-segment stats (the fused-kernel oracle:
+    the Pallas grid accumulates block sums in ascending row order)."""
+    ax = jnp.abs(x2d.astype(jnp.float32))
+    sums, maxs = [], []
+    for r0, r1 in _seg_rows(block_seg):
+        seg = ax[r0:r1]
+        sums.append(jnp.sum(jnp.sum(seg, axis=1)))
+        maxs.append(jnp.max(seg))
+    return jnp.stack(sums), jnp.stack(maxs)

@@ -1,0 +1,539 @@
+"""Segmented Pallas kernels + selectors for the flat residual arenas.
+
+One arena coalesces many same-dtype leaves (``repro.core.arena``); these
+kernels run each pipeline stage ONCE over the whole arena while keeping
+selection *segmented* — every slot keeps its own ``k_i``, statistics,
+threshold and bucket capacity, so the communicated set is bitwise
+identical to running the per-leaf selectors leaf by leaf:
+
+* ``seg_abs_sum_max``   — per-segment (sum|x|, max|x|) in one pass (the
+                          per-leaf ``block_stats`` twin);
+* ``seg_count_gt``      — per-segment nnz(|x| > t_i) with a PER-SEGMENT
+                          threshold vector (one launch per search step
+                          for the whole arena instead of per leaf);
+* ``seg_compact_gt``    — ``compact.compact_gt`` extended to per-segment
+                          thresholds and slot-local indices: block-
+                          bucketed compaction of every slot's survivors
+                          in one launch;
+* ``seg_residual_update_stats`` — the fused hot loop: momentum-corrected
+                          residual accumulation (Alg 4 l.11-19) AND the
+                          Alg 2/3 block statistics of the updated
+                          residual in a single pass over the arena (one
+                          HBM round-trip instead of two).
+
+Bitwise parity rests on the arena layout: slots are ``ARENA_BLOCK``-
+aligned and zero-padded, so each slot's rows are exactly the 2-D view
+the per-leaf kernels build, and the sequential grid accumulates each
+segment's blocks in the same ascending order as the per-leaf grid.
+
+The ``*_segments`` selectors orchestrate the kernels into Algorithm 2/3
+over all slots at once: threshold search loops are vectorized across
+segments with converged segments FROZEN (their state stops updating), so
+every segment walks the exact iterate sequence its per-leaf loop would.
+``use_pallas=False`` routes through the pure-jnp twins in ``ref.py`` —
+the same math the per-leaf jnp selectors in ``core.selection`` run.
+
+``interpret`` follows ``ops.resolve_interpret`` (None = auto-detect).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.selection import (Selected, bisect_midpoint,
+                                  mean_of_sum, threshold_at,
+                                  threshold_filter)
+
+from . import ref
+from .ops import _bucket_cap, _gather_topk_from_buckets, resolve_interpret
+
+__all__ = [
+    "seg_abs_sum_max", "seg_count_gt", "seg_compact_gt",
+    "seg_residual_update_stats", "seg_stats", "seg_mean",
+    "seg_counts",
+    "trimmed_topk_segments", "threshold_bsearch_segments",
+]
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _lane(n_seg: int) -> jax.Array:
+    return jax.lax.broadcasted_iota(jnp.int32, (1, n_seg), 1)
+
+
+def _pick(vec_ref, seg: jax.Array, n_seg: int) -> jax.Array:
+    """One-hot pick of a (1, n_seg) block's ``seg`` entry (TPU-safe —
+    no dynamic VMEM scalar indexing)."""
+    return jnp.sum(jnp.where(_lane(n_seg) == seg, vec_ref[...], 0.0))
+
+
+def _stats_kernel(seg_ref, x_ref, sum_ref, max_ref, *, n_seg: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros(sum_ref.shape, sum_ref.dtype)
+        max_ref[...] = jnp.zeros(max_ref.shape, max_ref.dtype)
+
+    ax = jnp.abs(x_ref[...].astype(jnp.float32))
+    hit = _lane(n_seg) == seg_ref[0, 0]
+    sum_ref[...] += jnp.where(hit, jnp.sum(ax), 0.0)
+    max_ref[...] = jnp.maximum(max_ref[...],
+                               jnp.where(hit, jnp.max(ax), 0.0))
+
+
+def seg_abs_sum_max(x2d: jax.Array, block_seg: np.ndarray, n_seg: int, *,
+                    interpret: bool | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Per-segment (sum|x|, max|x|) over [nb, block] arena rows."""
+    nb, block = x2d.shape
+    seg = jnp.asarray(block_seg, jnp.int32).reshape(nb, 1)
+    s, m = pl.pallas_call(
+        functools.partial(_stats_kernel, n_seg=n_seg),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n_seg), jnp.float32),
+            jax.ShapeDtypeStruct((1, n_seg), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(seg, x2d)
+    return s[0], m[0]
+
+
+def _count_kernel(seg_ref, thr_ref, x_ref, out_ref, *, n_seg: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    seg = seg_ref[0, 0]
+    thr = _pick(thr_ref, seg, n_seg)
+    c = jnp.sum((jnp.abs(x_ref[...].astype(jnp.float32)) > thr)
+                .astype(jnp.int32))
+    out_ref[...] += jnp.where(_lane(n_seg) == seg, c, 0)
+
+
+def seg_count_gt(x2d: jax.Array, block_seg: np.ndarray,
+                 thresholds: jax.Array, *, interpret: bool | None = None
+                 ) -> jax.Array:
+    """Per-segment nnz(|x| > thresholds[seg]) — one launch per search
+    step for the whole arena (the per-leaf path launches one per leaf)."""
+    nb, block = x2d.shape
+    n_seg = thresholds.shape[0]
+    seg = jnp.asarray(block_seg, jnp.int32).reshape(nb, 1)
+    out = pl.pallas_call(
+        functools.partial(_count_kernel, n_seg=n_seg),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_seg), jnp.int32),
+        interpret=resolve_interpret(interpret),
+    )(seg, thresholds.astype(jnp.float32).reshape(1, n_seg), x2d)
+    return out[0]
+
+
+def _compact_kernel(seg_ref, base_ref, size_ref, thr_ref, x_ref,
+                    vals_ref, idx_ref, cnt_ref, *, block: int, cap: int,
+                    n_seg: int):
+    x = x_ref[...].reshape(block).astype(jnp.float32)
+    seg = seg_ref[0, 0]
+    size = size_ref[0, 0]
+    thr = _pick(thr_ref, seg, n_seg)
+    lidx = base_ref[0, 0] + jax.lax.iota(jnp.int32, block)
+    mask = (jnp.abs(x) > thr) & (lidx < size)
+
+    cnt_ref[0, 0] = jnp.sum(mask.astype(jnp.int32))
+
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    live = mask & (pos < cap)
+    onehot = (pos[:, None] == jax.lax.iota(jnp.int32, cap)[None, :]) \
+        & live[:, None]
+    vals_ref[...] = (x[:, None] * onehot.astype(jnp.float32)) \
+        .sum(0).reshape(1, cap)
+    idx_packed = jnp.where(onehot, lidx[:, None], 0).sum(0)
+    filled = jnp.sum(onehot.astype(jnp.int32), axis=0) > 0
+    idx_ref[...] = jnp.where(filled, idx_packed, size).reshape(1, cap)
+
+
+def seg_compact_gt(x2d: jax.Array, block_seg: np.ndarray,
+                   block_base: np.ndarray, block_size: np.ndarray,
+                   thresholds: jax.Array, cap_per_block: int, *,
+                   interpret: bool | None = None
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``compact_gt`` with per-segment thresholds and SLOT-LOCAL indices.
+
+    Returns (values [nb, cap], indices [nb, cap] i32 — local to the
+    owning slot, padding == slot size, counts [nb] pre-clamp). Feeding
+    the buckets straight into the per-slot message gather removes the
+    separate per-leaf pack pass.
+    """
+    nb, block = x2d.shape
+    n_seg = thresholds.shape[0]
+    as_col = lambda a: jnp.asarray(a, jnp.int32).reshape(nb, 1)  # noqa: E731
+    kern = functools.partial(_compact_kernel, block=block,
+                             cap=cap_per_block, n_seg=n_seg)
+    vals, idx, cnt = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cap_per_block), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap_per_block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, cap_per_block), jnp.float32),
+            jax.ShapeDtypeStruct((nb, cap_per_block), jnp.int32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(as_col(block_seg), as_col(block_base), as_col(block_size),
+      thresholds.astype(jnp.float32).reshape(1, n_seg), x2d)
+    return vals, idx, cnt[:, 0]
+
+
+def _resid_kernel(*refs, n_seg: int, momentum: float, nesterov: bool,
+                  weight_decay: float, round_dtype, has_p: bool):
+    it = iter(refs)
+    seg_ref = next(it)
+    g_ref = next(it)
+    v_ref = next(it)
+    u_ref = next(it) if momentum else None
+    p_ref = next(it) if has_p else None
+    v_out = next(it)
+    u_out = next(it) if momentum else None
+    sum_ref = next(it)
+    max_ref = next(it)
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros(sum_ref.shape, sum_ref.dtype)
+        max_ref[...] = jnp.zeros(max_ref.shape, max_ref.dtype)
+
+    g = g_ref[...].astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * p_ref[...].astype(jnp.float32)
+    v = v_ref[...]
+    if momentum:
+        u = momentum * u_ref[...] + g
+        v_new = v + u
+        if nesterov:
+            v_new = v_new + g
+        u_out[...] = u
+    else:
+        v_new = v + g
+    if round_dtype is not None:
+        v_new = v_new.astype(round_dtype).astype(jnp.float32)
+    v_out[...] = v_new
+
+    ax = jnp.abs(v_new)
+    hit = _lane(n_seg) == seg_ref[0, 0]
+    sum_ref[...] += jnp.where(hit, jnp.sum(ax), 0.0)
+    max_ref[...] = jnp.maximum(max_ref[...],
+                               jnp.where(hit, jnp.max(ax), 0.0))
+
+
+def seg_residual_update_stats(
+    g2d: jax.Array,
+    v2d: jax.Array,
+    u2d: jax.Array | None,
+    p2d: jax.Array | None,
+    block_seg: np.ndarray,
+    n_seg: int,
+    *,
+    momentum: float,
+    nesterov: bool,
+    weight_decay: float = 0.0,
+    round_dtype=None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array | None, jax.Array, jax.Array]:
+    """Fused Alg 4 accumulation + Alg 2/3 statistics in ONE arena pass.
+
+    Returns (V' [nb, block], U' or None, per-seg sum|V'|, per-seg
+    max|V'|). ``round_dtype`` rounds V' through the residual storage
+    dtype (bf16 residuals) before statistics, matching the per-leaf
+    store-then-reload sequence bitwise. ``u2d`` is required iff
+    ``momentum`` is nonzero; ``p2d`` iff ``weight_decay`` is nonzero.
+    """
+    nb, block = g2d.shape
+    if momentum and u2d is None:
+        raise ValueError("momentum accumulation needs the velocity arena")
+    if weight_decay and p2d is None:
+        raise ValueError("weight decay needs the parameter arena")
+    seg = jnp.asarray(block_seg, jnp.int32).reshape(nb, 1)
+    row = pl.BlockSpec((1, block), lambda i: (i, 0))
+    acc = pl.BlockSpec((1, n_seg), lambda i: (0, 0))
+
+    ins = [seg, g2d, v2d]
+    in_specs = [pl.BlockSpec((1, 1), lambda i: (i, 0)), row, row]
+    if momentum:
+        ins.append(u2d)
+        in_specs.append(row)
+    if weight_decay:
+        ins.append(p2d)
+        in_specs.append(row)
+    out_specs = [row]
+    out_shape = [jax.ShapeDtypeStruct((nb, block), jnp.float32)]
+    if momentum:
+        out_specs.append(row)
+        out_shape.append(jax.ShapeDtypeStruct((nb, block), jnp.float32))
+    out_specs += [acc, acc]
+    out_shape += [jax.ShapeDtypeStruct((1, n_seg), jnp.float32),
+                  jax.ShapeDtypeStruct((1, n_seg), jnp.float32)]
+
+    kern = functools.partial(
+        _resid_kernel, n_seg=n_seg, momentum=momentum, nesterov=nesterov,
+        weight_decay=weight_decay, round_dtype=round_dtype,
+        has_p=bool(weight_decay))
+    outs = pl.pallas_call(
+        kern, grid=(nb,), in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=resolve_interpret(interpret),
+    )(*ins)
+    outs = list(outs)
+    v_new = outs.pop(0)
+    u_new = outs.pop(0) if momentum else None
+    sums, maxs = outs
+    return v_new, u_new, sums[0], maxs[0]
+
+
+# ---------------------------------------------------------------------------
+# Segmented selectors (Algorithm 2/3 across all slots at once)
+# ---------------------------------------------------------------------------
+
+def seg_mean(sums: jax.Array, geom) -> jax.Array:
+    """Per-segment mean from per-segment sums — the pinned reciprocal
+    multiply of ``selection.mean_of_sum``, vectorized over slots. The
+    ONE definition both ``seg_stats`` and the fused accumulate+stats
+    path use, so their statistics can never diverge."""
+    from repro.core.residual import pinned_product
+    recip = jnp.asarray([jnp.float32(1.0 / n) for n in geom.seg_sizes])
+    return pinned_product(sums, recip)
+
+
+def seg_stats(x2d: jax.Array, geom, *, use_pallas: bool,
+              interpret: bool | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Per-segment (mean|x|, max|x|). The jnp twin reduces each slot's
+    own [nblocks, block] rows with the shapes ``selection._stats`` uses,
+    so per-leaf statistics are reproduced bitwise on either backend."""
+    if use_pallas:
+        sums, maxs = seg_abs_sum_max(x2d, geom.block_seg, geom.n_seg,
+                                     interpret=interpret)
+    else:
+        sums, maxs = ref.seg_abs_sum_max(x2d, geom.block_seg,
+                                         geom.block_size, geom.n_seg)
+    return seg_mean(sums, geom), maxs
+
+
+def seg_counts(x2d: jax.Array, geom, thresholds: jax.Array, *,
+               use_pallas: bool, interpret: bool | None = None) -> jax.Array:
+    if use_pallas:
+        return seg_count_gt(x2d, geom.block_seg, thresholds,
+                            interpret=interpret)
+    return ref.seg_count_gt(x2d, geom.block_seg, thresholds, geom.n_seg)
+
+
+def _seg_buckets(x2d, geom, thresholds, cap, *, use_pallas, interpret):
+    if use_pallas:
+        return seg_compact_gt(x2d, geom.block_seg, geom.block_base,
+                              geom.block_size, thresholds, cap,
+                              interpret=interpret)
+    return ref.seg_compact_gt(x2d, geom.block_seg, geom.block_base,
+                              geom.block_size, thresholds, cap)
+
+
+def _caps(geom, block: int) -> tuple[list[int], int]:
+    caps = [_bucket_cap(k, r1 - r0, block)
+            for k, (r0, r1) in zip(geom.seg_ks, geom.seg_rows)]
+    return caps, max(caps)
+
+
+def _slot_flat(x2d: jax.Array, geom, s: int) -> jax.Array:
+    """Slot ``s`` as the flat f32[size] vector the per-leaf path sees."""
+    r0, r1 = geom.seg_rows[s]
+    return x2d[r0:r1].reshape(-1)[:geom.seg_sizes[s]]
+
+
+def trimmed_topk_segments(
+    x2d: jax.Array,
+    geom,
+    *,
+    eps: float = 0.2,
+    use_pallas: bool,
+    interpret: bool | None = None,
+    stats: tuple[jax.Array, jax.Array] | None = None,
+) -> list[Selected]:
+    """Algorithm 2 over every slot of one arena (capacity == k_i each).
+
+    The ratio walk runs vectorized with converged segments frozen, so
+    each slot's final threshold is bitwise the per-leaf loop's. Per-slot
+    bucket gathers fall back to the exact selector exactly when the
+    per-leaf path would (bucket overflow; on the jnp twin also the
+    under-k case the full top-k handles by padding with real indices).
+    """
+    mean, mx = stats if stats is not None else seg_stats(
+        x2d, geom, use_pallas=use_pallas, interpret=interpret)
+    k_vec = jnp.asarray(geom.seg_ks, jnp.int32)
+    count = functools.partial(seg_counts, x2d, geom, use_pallas=use_pallas,
+                              interpret=interpret)
+
+    r0 = jnp.full((geom.n_seg,), jnp.float32(1.0 - eps))
+    nnz0 = count(threshold_at(mean, mx, r0))
+
+    def cond(state):
+        ratio, nnz = state
+        return jnp.any((nnz < k_vec) & (ratio > 0.0))
+
+    def body(state):
+        ratio, nnz = state
+        active = (nnz < k_vec) & (ratio > 0.0)
+        ratio = jnp.where(active, ratio - eps, ratio)
+        cnt = count(threshold_at(mean, mx, ratio))
+        return ratio, jnp.where(active, cnt, nnz)
+
+    ratio, nnz = jax.lax.while_loop(cond, body, (r0, nnz0))
+    thr = threshold_at(mean, mx, ratio)
+
+    caps, cap_max = _caps(geom, geom.block)
+    vals, idx, cnts = _seg_buckets(x2d, geom, thr, cap_max,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)
+
+    out: list[Selected] = []
+    for s, ((row0, row1), k, n, cap) in enumerate(
+            zip(geom.seg_rows, geom.seg_ks, geom.seg_sizes, caps)):
+        si, sv = _gather_topk_from_buckets(
+            vals[row0:row1, :cap], idx[row0:row1, :cap], k, n,
+            order_by_magnitude=True)
+        overflow = jnp.any(cnts[row0:row1] > cap)
+        if use_pallas:
+            # mirror ops.trimmed_topk: exact fallback on overflow only
+            fallback = overflow
+
+            def exact(_, s=s, k=k):
+                from repro.core.selection import exact_topk
+                e = exact_topk(_slot_flat(x2d, geom, s), k)
+                return e.indices, e.values
+        else:
+            # mirror selection.trimmed_topk (no buckets at all): the full
+            # top-k pads with real zero-score indices when nnz < k
+            fallback = overflow | (nnz[s] < k)
+
+            def exact(_, s=s, k=k, t=thr[s]):
+                from repro.core.selection import _pad_topk
+                flat = _slot_flat(x2d, geom, s)
+                score = jnp.where(jnp.abs(flat) > t, jnp.abs(flat), 0.0)
+                e = _pad_topk(flat, score, k)
+                return e.indices, e.values
+
+        si, sv = jax.lax.cond(fallback, exact,
+                              lambda _, si=si, sv=sv: (si, sv),
+                              operand=None)
+        out.append(Selected(si, sv, jnp.int32(k)))
+    return out
+
+
+def threshold_bsearch_segments(
+    x2d: jax.Array,
+    geom,
+    *,
+    eps: float = 1e-3,
+    use_pallas: bool,
+    interpret: bool | None = None,
+    stats: tuple[jax.Array, jax.Array] | None = None,
+    refresh: jax.Array | None = None,
+    cached: jax.Array | None = None,
+) -> tuple[list[Selected], jax.Array]:
+    """Algorithm 3 over every slot of one arena (capacity == 2 k_i each).
+
+    ``refresh``/``cached`` implement the §5.2.2 sampled variant: segments
+    with ``refresh[s] == False`` skip the bisect entirely and filter at
+    ``cached[s]``. Returns the per-slot selections and the per-segment
+    thresholds used (the new ``LeafState.threshold`` cache).
+    """
+    mean, mx = stats if stats is not None else seg_stats(
+        x2d, geom, use_pallas=use_pallas, interpret=interpret)
+    k_vec = jnp.asarray(geom.seg_ks, jnp.int32)
+    two_k = 2 * k_vec
+    count = functools.partial(seg_counts, x2d, geom, use_pallas=use_pallas,
+                              interpret=interpret)
+    if refresh is None:
+        refresh = jnp.ones((geom.n_seg,), bool)
+
+    def searching(l, r, nnz):
+        done = (nnz >= k_vec) & (nnz <= two_k)
+        return refresh & ~done & ((r - l) > eps)
+
+    def cond(state):
+        l, r, nnz = state
+        return jnp.any(searching(l, r, nnz))
+
+    def body(state):
+        l, r, nnz = state
+        active = searching(l, r, nnz)
+        ratio = bisect_midpoint(l, r)
+        cnt = count(threshold_at(mean, mx, ratio))
+        nnz = jnp.where(active, cnt, nnz)
+        r = jnp.where(active & (cnt < k_vec), ratio, r)
+        l = jnp.where(active & (cnt > two_k), ratio, l)
+        return l, r, nnz
+
+    l, r, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((geom.n_seg,), jnp.float32),
+                     jnp.ones((geom.n_seg,), jnp.float32),
+                     jnp.full((geom.n_seg,), -1, jnp.int32)))
+    thr = threshold_at(mean, mx, bisect_midpoint(l, r))
+    if cached is not None:
+        thr = jnp.where(refresh, thr, cached)
+
+    nnz = count(thr)
+    caps, cap_max = _caps(geom, geom.block)
+    vals, idx, cnts = _seg_buckets(x2d, geom, thr, cap_max,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)
+
+    out: list[Selected] = []
+    for s, ((row0, row1), k, n, cap) in enumerate(
+            zip(geom.seg_rows, geom.seg_ks, geom.seg_sizes, caps)):
+        si, sv = _gather_topk_from_buckets(
+            vals[row0:row1, :cap], idx[row0:row1, :cap], 2 * k, n,
+            order_by_magnitude=False)
+        overflow = jnp.any(cnts[row0:row1] > cap)
+
+        def exact(_, s=s, k=k, t=thr[s]):
+            e = threshold_filter(_slot_flat(x2d, geom, s), t,
+                                 capacity=2 * k)
+            return e.indices, e.values
+
+        si, sv = jax.lax.cond(overflow, exact,
+                              lambda _, si=si, sv=sv: (si, sv),
+                              operand=None)
+        out.append(Selected(si, sv, jnp.minimum(nnz[s], 2 * k)))
+    return out, thr

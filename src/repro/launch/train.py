@@ -49,6 +49,12 @@ def main() -> None:
     ap.add_argument("--bucket-bytes", type=int, default=None,
                     help="bucketed_allgather: byte budget per fused "
                     "collective bucket (default 4 MiB)")
+    ap.add_argument("--no-fuse-leaves", action="store_true",
+                    help="disable the flat residual arenas (per-leaf "
+                    "mask/select/pack baseline)")
+    ap.add_argument("--backend", default=None, choices=["jnp", "pallas"],
+                    help="selection-kernel backend (pallas auto-compiles "
+                    "on TPU, interprets elsewhere)")
     ap.add_argument("--density", type=float, default=0.01)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--warmup-steps-per-stage", type=int, default=0)
@@ -73,10 +79,16 @@ def main() -> None:
     tc = TrainConfig(lr=args.lr, momentum=args.momentum,
                      optimizer=args.optimizer, transport=args.transport,
                      density=args.density,
-                     warmup_steps_per_stage=args.warmup_steps_per_stage)
+                     warmup_steps_per_stage=args.warmup_steps_per_stage,
+                     fuse_leaves=not args.no_fuse_leaves)
+    overrides = {}
     if args.bucket_bytes is not None:
+        overrides["bucket_bytes"] = args.bucket_bytes
+    if args.backend is not None:
+        overrides["backend"] = args.backend
+    if overrides:
         import dataclasses
-        tc = dataclasses.replace(tc, bucket_bytes=args.bucket_bytes)
+        tc = dataclasses.replace(tc, **overrides)
     trainer = Trainer(cfg, tc, mesh=mesh, ckpt_dir=args.ckpt_dir)
     state = trainer.init_state()
     n = sum(x.size for x in jax.tree.leaves(state.params))

@@ -109,6 +109,9 @@ def make_gradient_sync(tc: TrainConfig, mesh: Optional[Mesh],
         dense_warmup=tc.dense_warmup,
         bucket_bytes=tc.bucket_bytes,
         intra_axis=tc.intra_axis,
+        fuse_leaves=tc.fuse_leaves,
+        fuse_accumulate=tc.fuse_accumulate,
+        backend=tc.backend,
         timer=timer,
     )
 

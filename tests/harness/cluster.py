@@ -97,6 +97,8 @@ def train_and_eval(
     transport: str = "fused_allgather",
     bucket_bytes: int | None = None,
     intra_axis: str | None = None,
+    fuse_leaves: bool | None = None,
+    backend: str | None = None,
     nodes: int | None = None,
     lr: float = 0.1,
     momentum: float = 0.9,
@@ -115,18 +117,23 @@ def train_and_eval(
 
     ``nodes=N`` runs on the 2-axis ``("node","local")`` mesh (N nodes x
     devices/N locals) instead of the flat ``("data",)`` mesh — the
-    hierarchical transport's home. ``bucket_bytes`` / ``intra_axis``
-    parameterize the bucketed / hierarchical transports (None = the
-    TrainConfig defaults).
+    hierarchical transport's home. ``bucket_bytes`` / ``intra_axis`` /
+    ``fuse_leaves`` / ``backend`` parameterize the transport / flat-arena
+    / selection-kernel knobs (None = the TrainConfig defaults).
 
-    Returns ``{"held_loss", "losses", "num_devices", "steps"}``; ``losses``
-    is the per-step training-loss trace (loss is pmean'd over workers
-    inside the step, so it is the global-batch loss).
+    Returns ``{"held_loss", "losses", "num_devices", "steps", "digest"}``;
+    ``losses`` is the per-step training-loss trace (loss is pmean'd over
+    workers inside the step, so it is the global-batch loss) and
+    ``digest`` is a sha256 over the final params + optimizer-state bytes
+    — equal digests across subprocess runs mean BITWISE-identical
+    training (what the arena parity tests assert).
     """
     import dataclasses
+    import hashlib
 
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.configs import TrainConfig, get_config
     from repro.data import bigram_batches
@@ -139,7 +146,8 @@ def train_and_eval(
                      warmup_steps_per_stage=warmup_steps_per_stage,
                      dense_warmup=dense_warmup, seed=seed)
     overrides = {k: v for k, v in
-                 (("bucket_bytes", bucket_bytes), ("intra_axis", intra_axis))
+                 (("bucket_bytes", bucket_bytes), ("intra_axis", intra_axis),
+                  ("fuse_leaves", fuse_leaves), ("backend", backend))
                  if v is not None}
     if overrides:
         tc = dataclasses.replace(tc, **overrides)
@@ -166,11 +174,16 @@ def train_and_eval(
     for _ in range(eval_batches):
         b = {k: jnp.asarray(v) for k, v in next(src).items()}
         held += float(tr.model.loss(state.params, b))
+
+    digest = hashlib.sha256()
+    for leaf in (jax.tree.leaves(state.params) + jax.tree.leaves(state.rgc)):
+        digest.update(np.asarray(leaf).tobytes())
     return {
         "held_loss": held / eval_batches,
         "losses": losses,
         "num_devices": len(jax.devices()) if use_mesh else 1,
         "steps": state.step,
+        "digest": digest.hexdigest(),
     }
 
 

@@ -86,7 +86,11 @@ def test_short_training_reduces_loss(arch):
                      density=0.05, optimizer="rgc", local_clip=1.0)
     tr = Trainer(cfg, tc)
     model = tr.model
-    bsz, seq, steps = 8, 64, 30
+    # MoE held-out loss is non-monotone over the first ~40 steps at smoke
+    # scale (routing settles before the experts learn): give that family
+    # a longer horizon so the assertion tests learning, not router noise
+    bsz, seq = 8, 64
+    steps = 60 if cfg.family == "moe" else 30
     stub = {k: v for k, v in model.make_train_batch(bsz, seq).items()
             if k != "tokens"}
 

@@ -1,0 +1,407 @@
+"""Flat residual arena tests: layout invariants (hypothesis round-trips),
+bitwise parity of the fused pipeline vs the per-leaf pipeline (eager, jit,
+both selection backends, corrections, bf16 residuals), dispatch-count
+reduction, the per-step plan cache, fallback rules, and the 8-device
+subprocess / real-Trainer parity runs."""
+import math
+import os
+
+import numpy as np
+import pytest
+
+ARENA_PROG = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "_arena_prog.py")
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+SIZES = {"a": 33_001, "big": 300_000, "c": 500, "single": 1}
+
+
+def _tree(seed=0, sizes=SIZES):
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    params = {k: jnp.asarray(rng.standard_normal(n), jnp.float32)
+              for k, n in sizes.items()}
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+    return params, grads
+
+
+def _run(params, grads, fuse, steps=3, jit=True, timer=None, **kw):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_gradient_sync
+    sync = build_gradient_sync(
+        kw.pop("spec", "rgc"), transport="fused_allgather", sync_axes=(),
+        density=0.01, dense_threshold_bytes=2048, fuse_leaves=fuse,
+        timer=timer, **kw)
+    st = sync.init(params)
+    step = (lambda p, st: sync.update(grads, st, p, jnp.float32(0.1)))
+    if jit:
+        step = jax.jit(step)
+    p = params
+    for _ in range(steps):
+        p, st = step(p, st)
+    return p, st
+
+
+def _assert_bitwise(a, b):
+    import jax
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype
+        assert np.array_equal(x, y, equal_nan=True), \
+            f"max|d|={np.max(np.abs(x.astype(np.float64) - y))}"
+
+
+# ---------------------------------------------------------------------------
+# layout invariants
+# ---------------------------------------------------------------------------
+
+def _build(sizes, dtype="float32"):
+    from repro.core import arena
+    return arena.build_group(
+        0, "trimmed_topk", dtype,
+        [(i, f"leaf{i}", n, max(1, math.ceil(0.01 * n)),
+          max(1, math.ceil(0.01 * n)), 1 + 2 * max(1, math.ceil(0.01 * n)))
+         for i, n in enumerate(sizes)])
+
+
+class TestLayout:
+    def test_alignment_and_no_overlap(self):
+        from repro.core.arena import ARENA_BLOCK
+        g = _build([1, 1023, 1024, 1025, 50_000])
+        spans = []
+        for s in g.slots:
+            assert s.offset % ARENA_BLOCK == 0
+            assert s.padded % ARENA_BLOCK == 0
+            assert s.padded >= s.size
+            assert s.padded - s.size < ARENA_BLOCK
+            spans.append((s.offset, s.offset + s.padded))
+        spans.sort()
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 <= b0, "slots overlap"
+        assert g.total == spans[-1][1]
+
+    def test_geometry_maps(self):
+        g = _build([1023, 2049, 7])
+        geom = g.geometry
+        assert geom.nblocks == g.nblocks
+        for s_ord, slot in enumerate(g.slots):
+            r0, r1 = slot.rows
+            assert list(geom.block_seg[r0:r1]) == [s_ord] * slot.nblocks
+            assert list(geom.block_base[r0:r1]) == \
+                [i * 1024 for i in range(slot.nblocks)]
+            assert all(geom.block_size[r0:r1] == slot.size)
+
+    def test_message_layout(self):
+        from repro.core.sync import message_len
+        g = _build([1000, 2000])
+        off = 0
+        for s in g.slots:
+            assert s.msg_offset == off
+            assert s.msg_len == message_len(s.capacity, False)
+            off += s.msg_len
+        assert g.msg_total == off
+
+    @staticmethod
+    def _roundtrip(sizes, seed):
+        import jax.numpy as jnp
+
+        from repro.core import arena
+        g = _build(sizes)
+        rng = np.random.default_rng(seed)
+        arrs = [jnp.asarray(rng.standard_normal(n), jnp.float32)
+                for n in sizes]
+        a2d = arena.gather(g, arrs)
+        assert a2d.shape == (g.nblocks, arena.ARENA_BLOCK)
+        back = arena.scatter(g, a2d)
+        for slot in g.slots:
+            np.testing.assert_array_equal(np.asarray(back[slot.leaf]),
+                                          np.asarray(arrs[slot.leaf]))
+        # inter-slot padding is zero-filled
+        flat = np.asarray(a2d).reshape(-1)
+        mask = np.ones(g.total, bool)
+        for slot in g.slots:
+            mask[slot.offset:slot.offset + slot.size] = False
+        assert np.all(flat[mask] == 0.0)
+
+    @pytest.mark.parametrize("sizes,seed", [
+        ([1], 0), ([1024], 1), ([1023, 1025], 2),
+        ([1, 1, 1], 3), ([5000, 7, 2048, 999], 4),
+    ])
+    def test_gather_scatter_roundtrip_grid(self, sizes, seed):
+        """Deterministic twin of the hypothesis round-trip (runs even
+        without hypothesis installed)."""
+        self._roundtrip(sizes, seed)
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=25, deadline=None)
+        @given(st.lists(st.integers(min_value=1, max_value=5000),
+                        min_size=1, max_size=8),
+               st.integers(min_value=0, max_value=2**31 - 1))
+        def test_gather_scatter_roundtrip(self, sizes, seed):
+            self._roundtrip(sizes, seed)
+
+    def test_group_partitioning_by_dtype_and_compressor(self):
+        """One arena never mixes dtypes or selection algorithms."""
+        import jax.numpy as jnp
+
+        from repro.core import build_gradient_sync
+        params = {"f32_big": jnp.zeros(300_000, jnp.float32),
+                  "bf16_big": jnp.zeros(300_000, jnp.bfloat16),
+                  "f32_mid": jnp.zeros(40_000, jnp.float32),
+                  "bf16_mid": jnp.zeros(40_000, jnp.bfloat16)}
+        sync = build_gradient_sync("rgc", density=0.01,
+                                   dense_threshold_bytes=2048)
+        grads = params
+        import jax
+        leaves, treedef = jax.tree.flatten(grads)
+        plan = sync._plan(grads, treedef, leaves, 0.01, False)
+        for group in plan.groups:
+            dts = {str(leaves[s.leaf].dtype) for s in group.slots}
+            assert dts == {group.dtype}
+        keys = [(g.compressor, g.dtype) for g in plan.groups]
+        assert len(keys) == len(set(keys))
+        # 40 KB*4 = 160KB f32 -> trimmed; 80 KB bf16 -> ... real itemsize
+        # dispatch means the same element count lands in different groups
+        assert len(plan.groups) >= 2
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity, single process
+# ---------------------------------------------------------------------------
+
+class TestBitwiseParity:
+    @pytest.mark.parametrize("jit", [False, True])
+    def test_rgc_mixed_tree(self, jit):
+        params, grads = _tree()
+        _assert_bitwise(_run(params, grads, True, jit=jit),
+                        _run(params, grads, False, jit=jit))
+
+    def test_pallas_backend(self):
+        params, grads = _tree(sizes={"a": 33_001, "big": 200_000, "c": 500})
+        _assert_bitwise(_run(params, grads, True, backend="pallas"),
+                        _run(params, grads, False, backend="pallas"))
+
+    def test_corrections_spec(self):
+        params, grads = _tree(1)
+        kw = dict(spec="momentum+clip(threshold_bsearch)", local_clip=1.0)
+        _assert_bitwise(_run(params, grads, True, **kw),
+                        _run(params, grads, False, **kw))
+
+    def test_weight_decay_and_nesterov(self):
+        params, grads = _tree(2)
+        kw = dict(weight_decay=0.01, nesterov=True)
+        _assert_bitwise(_run(params, grads, True, **kw),
+                        _run(params, grads, False, **kw))
+
+    def test_bf16_residual(self):
+        import jax.numpy as jnp
+        params, grads = _tree(3)
+        kw = dict(residual_dtype=jnp.bfloat16)
+        _assert_bitwise(_run(params, grads, True, **kw),
+                        _run(params, grads, False, **kw))
+
+    def test_single_leaf_and_momentumless(self):
+        params, grads = _tree(4, sizes={"w": 200_000})
+        kw = dict(momentum=0.0)
+        _assert_bitwise(_run(params, grads, True, **kw),
+                        _run(params, grads, False, **kw))
+
+    def test_fuse_accumulate_exact_when_momentumless(self):
+        """The single-pass fused accumulate kernel is bitwise when there
+        is no momentum/weight-decay product to contract."""
+        params, grads = _tree(5)
+        kw = dict(momentum=0.0)
+        _assert_bitwise(_run(params, grads, True, fuse_accumulate=True, **kw),
+                        _run(params, grads, False, **kw))
+
+    def test_fuse_accumulate_close_with_momentum(self):
+        """With momentum the fused kernel may differ by ulps (documented
+        FMA caveat) but must track the per-leaf path closely."""
+        import jax
+        params, grads = _tree(6)
+        a = _run(params, grads, True, fuse_accumulate=True)
+        b = _run(params, grads, False)
+        for x, y in zip(jax.tree.leaves(a[0]), jax.tree.leaves(b[0])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting + plan cache + fallbacks
+# ---------------------------------------------------------------------------
+
+def _counts(fuse, **kw):
+    from repro.core import WallClockTimer
+    params, grads = _tree()
+    timer = WallClockTimer()
+    _run(params, grads, fuse, steps=1, jit=False, timer=timer, **kw)
+    return timer.summary()["counts"]
+
+
+class TestDispatchCounts:
+    def test_arena_reduces_select_mask_pack_to_arenas(self):
+        per_leaf = _counts(False)
+        fused = _counts(True)
+        # 3 sparse leaves in SIZES ("a", "big" trimmed/bsearch; "c"/"single"
+        # are dense at the 2048-byte threshold? c=2000B dense, single dense)
+        for stage in ("select", "mask", "pack"):
+            key = f"dispatch_{stage}"
+            assert fused[key] < per_leaf[key]
+        assert fused["messages"] < per_leaf["messages"]
+        # accumulate stays per-leaf by default (bitwise graph)
+        assert fused["dispatch_accumulate"] == per_leaf["dispatch_accumulate"]
+
+    def test_fuse_accumulate_reduces_accumulate_dispatches(self):
+        per_leaf = _counts(False)
+        fused = _counts(True, fuse_accumulate=True)
+        assert fused["dispatch_accumulate"] < per_leaf["dispatch_accumulate"]
+
+    def test_quantized_falls_back_per_leaf(self):
+        fused = _counts(True, spec="quantized(trimmed_topk)")
+        per_leaf = _counts(False, spec="quantized(trimmed_topk)")
+        assert fused == per_leaf   # no segmented impl -> identical pipeline
+
+
+class TestPlanCache:
+    def test_plan_reused_across_steps(self):
+        import jax.numpy as jnp
+
+        from repro.core import build_gradient_sync
+        params, grads = _tree()
+        sync = build_gradient_sync("rgc", density=0.01,
+                                   dense_threshold_bytes=2048)
+        st = sync.init(params)
+        p, st = sync.update(grads, st, params, jnp.float32(0.1))
+        assert len(sync._plans) == 1
+        plan = next(iter(sync._plans.values()))
+        sync.update(grads, st, p, jnp.float32(0.1))
+        assert len(sync._plans) == 1
+        assert next(iter(sync._plans.values())) is plan
+
+    def test_density_keys_new_plan(self):
+        import jax.numpy as jnp
+
+        from repro.core import build_gradient_sync
+        params, grads = _tree()
+        sync = build_gradient_sync("rgc", density=0.01,
+                                   dense_threshold_bytes=2048)
+        st = sync.init(params)
+        sync.update(grads, st, params, jnp.float32(0.1))
+        sync.update(grads, st, params, jnp.float32(0.1), density=0.05)
+        sync.update(grads, st, params, jnp.float32(0.1), density=1.0)
+        assert len(sync._plans) == 3
+        dense_plan = sync._plans[next(
+            k for k in sync._plans if k[-1])]     # all_dense key
+        assert not dense_plan.groups and not dense_plan.sparse
+
+    def test_dispatch_sees_raw_gradient_dtype(self):
+        """The plan is built BEFORE corrections run, so §5.5 dispatch
+        sees the parameter's real storage dtype even with local_clip
+        enabled (whose f32 upcast used to leak into the byte-size
+        dispatch): a 48K-element bf16 leaf is 96 KB -> dense, not the
+        192 KB -> trimmed its f32-upcast view would suggest."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import build_gradient_sync
+        grads = {"w": jnp.zeros(48 * 1024, jnp.bfloat16)}
+        sync = build_gradient_sync("rgc", local_clip=1.0)
+        leaves, treedef = jax.tree.flatten(grads)
+        plan = sync._plan(grads, treedef, leaves, 0.001, False)
+        assert plan.dense == (0,)
+        assert not plan.groups and not plan.sparse
+
+    def test_custom_correction_disables_fusion(self):
+        import jax.numpy as jnp
+
+        from repro.core import build_gradient_sync
+        from repro.core.correction import CorrectionBase
+
+        class Weird(CorrectionBase):
+            name = "weird"
+
+            def accumulate(self, grad, param, state, *, weight_decay):
+                return state._replace(residual=grad.astype(jnp.float32))
+
+        params, grads = _tree()
+        sync = build_gradient_sync("rgc", density=0.01,
+                                   dense_threshold_bytes=2048)
+        sync.corrections = (Weird(),) + sync.corrections
+        sync._arena_ok = all(c.arena_safe() for c in sync.corrections)
+        assert not sync._arena_ok
+        import jax
+        leaves, treedef = jax.tree.flatten(grads)
+        plan = sync._plan(grads, treedef, leaves, 0.01, False)
+        assert not plan.groups     # everything stays per-leaf
+        assert plan.sparse
+
+
+# ---------------------------------------------------------------------------
+# numerics pins (the contraction fences the parity above rests on)
+# ---------------------------------------------------------------------------
+
+class TestPinnedNumerics:
+    def test_pinned_product_value(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.residual import pinned_product
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.standard_normal(4096), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(4096), jnp.float32)
+        want = np.asarray(a) * np.asarray(b)
+        np.testing.assert_array_equal(np.asarray(pinned_product(a, b)), want)
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(pinned_product)(a, b)), want)
+
+    def test_pinned_sum_is_context_independent(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.selection import pinned_sum
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(np.abs(rng.standard_normal(33_001)), jnp.float32)
+        plain = float(pinned_sum(x))
+        jitted = float(jax.jit(pinned_sum)(x))
+        # and embedded in a bigger graph
+        bigger = float(jax.jit(
+            lambda x: pinned_sum(x) + 0 * jnp.max(x))(x))
+        assert plain == jitted == bigger
+
+    def test_pinned_sum_empty_pad(self):
+        import jax.numpy as jnp
+
+        from repro.core.selection import pinned_sum
+        assert float(pinned_sum(jnp.asarray([3.5], jnp.float32))) == 3.5
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess + real-Trainer parity
+# ---------------------------------------------------------------------------
+
+def test_arena_parity_8dev(run_prog):
+    out = run_prog(ARENA_PROG)
+    assert "FAIL" not in out
+
+
+def test_trainer_bitwise_parity_on_cluster():
+    """Real Trainer, 8-device simulated cluster, multi-step: the fused
+    arenas must reproduce the per-leaf run BITWISE (params + optimizer
+    state digests and the loss trace)."""
+    from harness import run_cluster
+
+    spec = dict(arch="paper-lstm", optimizer="rgc", steps=6, density=0.01)
+    fused = run_cluster(dict(spec, fuse_leaves=True), devices=8)
+    per_leaf = run_cluster(dict(spec, fuse_leaves=False), devices=8)
+    assert fused["num_devices"] == 8
+    assert fused["losses"] == per_leaf["losses"]
+    assert fused["digest"] == per_leaf["digest"]

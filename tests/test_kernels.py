@@ -205,3 +205,165 @@ class TestKernelSelectors:
                                  cfg=cfg)
             outs[backend] = np.asarray(new_p["w"])
         np.testing.assert_allclose(outs["jnp"], outs["pallas"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# segmented (flat-arena) kernels vs their jnp twins
+# ---------------------------------------------------------------------------
+
+def _arena(sizes, seed=0):
+    """Block-aligned arena [nb, 1024] + geometry for the given slot sizes."""
+    from repro.core import arena as A
+    group = A.build_group(
+        0, "trimmed_topk", "float32",
+        [(i, f"l{i}", n, max(1, n // 100), max(1, n // 100),
+          1 + 2 * max(1, n // 100)) for i, n in enumerate(sizes)])
+    rng = np.random.default_rng(seed)
+    arrs = [jnp.asarray(rng.standard_normal(n), jnp.float32) for n in sizes]
+    return A.gather(group, arrs), group.geometry, arrs
+
+
+SEG_CASES = [
+    [1000],                       # single slot
+    [1023, 1025, 7],              # non-block-multiple mix
+    [2048, 1, 5000],              # single-element slot
+    [64, 64, 64, 64],             # several tiny slots
+]
+
+
+class TestSegmentedKernels:
+    @pytest.mark.parametrize("sizes", SEG_CASES)
+    def test_seg_abs_sum_max(self, sizes):
+        from repro.kernels import segmented as kseg
+        x2d, geom, arrs = _arena(sizes)
+        s, m = kseg.seg_abs_sum_max(x2d, geom.block_seg, geom.n_seg,
+                                    interpret=True)
+        s_ref, m_ref = ref.seg_abs_sum_max(x2d, geom.block_seg,
+                                           geom.block_size, geom.n_seg)
+        np.testing.assert_allclose(s, s_ref, rtol=1e-6)
+        np.testing.assert_array_equal(m, m_ref)
+        # and against the per-leaf selector statistics
+        for i, a in enumerate(arrs):
+            np.testing.assert_array_equal(m[i], jnp.max(jnp.abs(a)))
+
+    @pytest.mark.parametrize("sizes", SEG_CASES)
+    @pytest.mark.parametrize("thr", [0.0, 0.5, 2.0])
+    def test_seg_count_gt(self, sizes, thr):
+        from repro.kernels import segmented as kseg
+        x2d, geom, arrs = _arena(sizes, seed=3)
+        thrs = jnp.full((geom.n_seg,), thr, jnp.float32)
+        got = kseg.seg_count_gt(x2d, geom.block_seg, thrs, interpret=True)
+        want = ref.seg_count_gt(x2d, geom.block_seg, thrs, geom.n_seg)
+        np.testing.assert_array_equal(got, want)
+        # per-segment counts match the per-leaf count over the slot
+        # (identical zero padding on both sides)
+        for i, a in enumerate(arrs):
+            pad = (-a.size) % 1024
+            assert int(got[i]) == int(
+                jnp.sum(jnp.abs(jnp.pad(a, (0, pad))) > thr))
+
+    @pytest.mark.parametrize("sizes", SEG_CASES)
+    def test_seg_compact_gt(self, sizes):
+        from repro.kernels import segmented as kseg
+        x2d, geom, arrs = _arena(sizes, seed=7)
+        thrs = jnp.full((geom.n_seg,), 0.8, jnp.float32)
+        cap = 16
+        g = kseg.seg_compact_gt(x2d, geom.block_seg, geom.block_base,
+                                geom.block_size, thrs, cap, interpret=True)
+        w = ref.seg_compact_gt(x2d, geom.block_seg, geom.block_base,
+                               geom.block_size, thrs, cap)
+        np.testing.assert_array_equal(g[2], w[2])     # counts
+        np.testing.assert_array_equal(g[1], w[1])     # local indices
+        np.testing.assert_allclose(g[0], w[0])        # values
+        # indices are slot-LOCAL with padding == slot size; padding in
+        # the arena (beyond each slot's size) is never selected
+        for s_ord, (r0, r1) in enumerate(geom.seg_rows):
+            size = geom.seg_sizes[s_ord]
+            idx = np.asarray(g[1][r0:r1])
+            assert np.all(idx <= size)
+
+    @pytest.mark.parametrize("momentum,nesterov,wd",
+                             [(0.9, False, 0.0), (0.9, True, 0.0),
+                              (0.0, False, 0.0), (0.9, False, 0.01)])
+    def test_seg_residual_update_stats(self, momentum, nesterov, wd):
+        from repro.kernels import segmented as kseg
+        sizes = [1023, 300, 2048]
+        x2d, geom, _ = _arena(sizes, seed=9)
+        g2d, _, _ = _arena(sizes, seed=10)
+        u2d, _, _ = _arena(sizes, seed=11)
+        p2d, _, _ = _arena(sizes, seed=12)
+        got = kseg.seg_residual_update_stats(
+            g2d, x2d, u2d if momentum else None, p2d if wd else None,
+            geom.block_seg, geom.n_seg, momentum=momentum,
+            nesterov=nesterov, weight_decay=wd, interpret=True)
+        want = ref.seg_residual_update_stats(
+            g2d, x2d, u2d if momentum else None, p2d if wd else None,
+            geom.block_seg, geom.n_seg, momentum=momentum,
+            nesterov=nesterov, weight_decay=wd)
+        # the fused kernel may FMA-contract the momentum product
+        # (documented fuse_accumulate caveat): allow last-ulp noise
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-6,
+                                   atol=1e-6)              # V'
+        if momentum:
+            np.testing.assert_allclose(got[1], want[1], rtol=1e-6,
+                                       atol=1e-6)          # U'
+        else:
+            assert got[1] is None and want[1] is None
+        np.testing.assert_allclose(got[2], want[2], rtol=1e-5)  # sums
+        np.testing.assert_allclose(got[3], want[3], rtol=1e-6)  # maxs
+
+    def test_seg_residual_bf16_round(self):
+        from repro.kernels import segmented as kseg
+        sizes = [1500]
+        x2d, geom, _ = _arena(sizes, seed=20)
+        g2d, _, _ = _arena(sizes, seed=21)
+        v, _, _, _ = kseg.seg_residual_update_stats(
+            g2d, x2d, None, None, geom.block_seg, geom.n_seg,
+            momentum=0.0, nesterov=False, round_dtype=jnp.bfloat16,
+            interpret=True)
+        v = np.asarray(v)
+        assert np.array_equal(v, np.asarray(
+            jnp.asarray(v).astype(jnp.bfloat16).astype(jnp.float32)))
+
+
+class TestSegmentedSelectors:
+    """Segmented selectors vs the per-leaf selectors, slot by slot
+    (the bitwise contract the arena pipeline rests on)."""
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_trimmed_matches_per_leaf(self, use_pallas):
+        from repro.core.selection import trimmed_topk
+        from repro.kernels import segmented as kseg
+        sizes = [33_001, 500, 2048]
+        x2d, geom, arrs = _arena(sizes, seed=31)
+        selected = kseg.trimmed_topk_segments(
+            x2d, geom, use_pallas=use_pallas, interpret=True)
+        for i, a in enumerate(arrs):
+            k = geom.seg_ks[i]
+            if use_pallas:
+                want = ops.trimmed_topk(a, k, interpret=True)
+            else:
+                want = trimmed_topk(a, k)
+            np.testing.assert_array_equal(selected[i].indices, want.indices)
+            np.testing.assert_array_equal(selected[i].values, want.values)
+            assert int(selected[i].count) == int(want.count)
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_bsearch_matches_per_leaf(self, use_pallas):
+        from repro.core.selection import threshold_binary_search
+        from repro.kernels import segmented as kseg
+        sizes = [33_001, 4096]
+        x2d, geom, arrs = _arena(sizes, seed=32)
+        sel_list, thr = kseg.threshold_bsearch_segments(
+            x2d, geom, use_pallas=use_pallas, interpret=True)
+        for i, a in enumerate(arrs):
+            k = geom.seg_ks[i]
+            if use_pallas:
+                want, thr_want = ops.threshold_binary_search(
+                    a, k, interpret=True)
+            else:
+                want, thr_want = threshold_binary_search(a, k)
+            np.testing.assert_array_equal(sel_list[i].indices, want.indices)
+            np.testing.assert_array_equal(sel_list[i].values, want.values)
+            assert int(sel_list[i].count) == int(want.count)
+            np.testing.assert_array_equal(thr[i], thr_want)

@@ -129,6 +129,16 @@ def test_single_worker_parity(transport, kw):
 # stage-timer hook
 # ---------------------------------------------------------------------------
 
+def test_stage_set_pinned():
+    """Fig 10's stage axis, with the paper's "mask" bar split into
+    ``accumulate`` (Alg 4 l.8-19 residual/momentum accumulation) and
+    ``mask`` (l.21-23 state clearing) — summing the two recovers the
+    paper's bar. Benchmarks and docs key on these exact names."""
+    from repro.core import STAGES
+    assert STAGES == ("accumulate", "select", "mask", "pack", "transfer",
+                      "unpack")
+
+
 def test_wallclock_timer_records_stages():
     import jax
     import jax.numpy as jnp
