@@ -147,6 +147,15 @@ class TrainConfig:
     # ("pod","data") batch axes. Every other sync axis forms the
     # inter-node sparse-allgather hop.
     intra_axis: Optional[str] = None
+    # §5.6 overlap scheduler (repro.core.overlap): "sequential" (one
+    # full-tree transport barrier per step — the historical order),
+    # "chunked" (partition the tree into reverse-parameter-order chunks
+    # under bucket_bytes and dispatch each chunk's collective as soon as
+    # its select/mask/pack is issued — bitwise identical results, >= 2
+    # transport dispatches per step), or "stale1" (communicate step t-1's
+    # compressed residual during step t — double-buffered, one step of
+    # sparse staleness; requires a fixed target density, dense warm-up ok)
+    schedule: str = "sequential"
     density: float = 0.001
     warmup_steps_per_stage: int = 0
     dense_warmup: bool = False

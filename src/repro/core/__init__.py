@@ -16,11 +16,15 @@ Layering:
   * ``instrument``    — StageTimer implementations (NullTimer /
                         WallClockTimer) for the Fig 10 stage decomposition
   * ``dispatch``      — size_based (§5.5, real dtype bytes) / fixed
+  * ``overlap``       — §5.6 overlap schedules: sequential / chunked
+                        (reverse-order chunk pipelining) / stale1
+                        (one-step-delayed double buffering)
   * ``gradient_sync`` — the composed optax-style transform
   * ``rgc``           — legacy ``rgc_init``/``rgc_apply`` shims
 """
 from . import registry
-from .api import Compressor, Correction, DispatchPolicy, StageTimer, Transport
+from .api import (Compressor, Correction, DispatchPolicy, Schedule,
+                  StageTimer, Transport)
 from .compressors import Dense, ExactTopK, Quantized, ThresholdBSearch, \
     TrimmedTopK
 from .correction import (CorrectionBase, FactorMasking, LocalClip,
@@ -31,6 +35,8 @@ from .cost_model import (NetworkModel, PRESETS, choose_method, eq1_terms,
 from .dispatch import FixedPolicy, SizeBasedPolicy, leaf_nbytes
 from .gradient_sync import GradientSync, build_gradient_sync
 from .instrument import STAGES, NullTimer, WallClockTimer
+from .overlap import (Chunk, ChunkedSchedule, ScheduleState,
+                      SequentialSchedule, Stale1Schedule, partition_chunks)
 from .rgc import RGCConfig, gradient_sync_from_rgc_config, rgc_apply, rgc_init
 from .schedule import DensitySchedule
 from .selection import (Selected, exact_topk, exact_topk_quant,
@@ -42,7 +48,8 @@ from .transport import (BucketedAllgather, DensePsum, FusedAllgather,
 
 __all__ = [
     "registry",
-    "Compressor", "Correction", "DispatchPolicy", "StageTimer", "Transport",
+    "Compressor", "Correction", "DispatchPolicy", "Schedule", "StageTimer",
+    "Transport",
     "Dense", "ExactTopK", "Quantized", "ThresholdBSearch", "TrimmedTopK",
     "CorrectionBase", "FactorMasking", "LocalClip", "MomentumCorrection",
     "Warmup", "split_corrections",
@@ -51,6 +58,8 @@ __all__ = [
     "FixedPolicy", "SizeBasedPolicy", "leaf_nbytes",
     "GradientSync", "build_gradient_sync",
     "STAGES", "NullTimer", "WallClockTimer",
+    "Chunk", "ChunkedSchedule", "ScheduleState", "SequentialSchedule",
+    "Stale1Schedule", "partition_chunks",
     "RGCConfig", "gradient_sync_from_rgc_config", "rgc_apply", "rgc_init",
     "DensitySchedule",
     "Selected", "exact_topk", "exact_topk_quant", "threshold_binary_search",

@@ -40,6 +40,18 @@ four swappable protocols, each string-addressable via
     §5.5 byte-size dispatch (using real ``dtype.itemsize`` bytes);
     ``fixed`` routes every leaf through one named compressor.
 
+``Schedule``
+    The §5.6 overlap scheduler: owns the ORDER in which
+    ``GradientSync.update`` compresses, dispatches and applies its sync
+    units, and any cross-step double buffering. ``sequential`` is the
+    historical full-tree barrier; ``chunked`` partitions the tree into
+    reverse-parameter-order chunks and dispatches each chunk's
+    collective as soon as its gradients are processed (bitwise
+    identical results, >= 2 transport dispatches per step); ``stale1``
+    communicates step *t-1*'s compressed residual during step *t*
+    (double-buffered, one step of sparse staleness). Implementations in
+    ``repro.core.overlap``.
+
 ``Correction``
     Convergence-preserving transforms (Deep Gradient Compression, Lin et
     al. 1712.01887) that run AHEAD of any registered compressor:
@@ -117,6 +129,12 @@ class StageTimer(Protocol):
 
     def count(self, name: str, n: int = 1) -> None:
         """Accumulate a counter (no barrier, no timing)."""
+        ...
+
+    def set_lane(self, lane: str | None) -> None:
+        """Attribute subsequent stages to a lane (e.g. ``"chunk0"`` —
+        the per-chunk attribution of the ``chunked`` schedule); ``None``
+        returns to the unlaned default."""
         ...
 
     def summary(self) -> dict:
@@ -201,4 +219,39 @@ class Correction(Protocol):
 
     def density_at(self, step: int, target: float) -> float | None:
         """Scheduled density at ``step``; None = no schedule owned here."""
+        ...
+
+
+@runtime_checkable
+class Schedule(Protocol):
+    """Overlap scheduler (§5.6): the dispatch order of one sync step.
+
+    ``GradientSync`` delegates its whole ``init``/``update`` orchestration
+    here: ``init_state`` may wrap the params-congruent LeafState tree
+    (``stale1`` adds the double-buffered pending messages —
+    ``overlap.ScheduleState``), and ``step`` drives the pipeline through
+    the ``GradientSync`` stage helpers (``_compress_plan`` / ``_gather``
+    / ``_apply_gathered`` / ``_dense_reduce`` / ``_dense_apply``),
+    deciding how the work is chunked, when each transport collective is
+    dispatched, and which step's messages it carries. Implementations:
+    ``repro.core.overlap`` (``sequential`` / ``chunked`` / ``stale1``),
+    registry kind ``registry.SCHEDULE``.
+    """
+
+    name: str
+
+    def init_state(self, sync: Any, params: Any, leaf_state: Any) -> Any:
+        """Wrap (or pass through) the LeafState tree as the full state."""
+        ...
+
+    def step(self, sync: Any, grads: Any, state: Any, params: Any,
+             lr: jax.Array, density: float) -> tuple[Any, Any]:
+        """One synchronized step; returns (new_params, new_state)."""
+        ...
+
+    def wrap_state_specs(self, leaf_specs: Any, replicated: Any) -> Any:
+        """Partition specs congruent with ``init_state``'s wrapping:
+        given the LeafState tree's specs and a replicated (prefix) spec
+        for any schedule-owned buffers, return the full state's specs
+        (the trainer's shard_map/jit plumbing)."""
         ...

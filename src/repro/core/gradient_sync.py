@@ -23,6 +23,15 @@ set, params and optimizer state are bitwise identical to the per-leaf
 path. The static per-step plan (paths, dispatch, k targets, arena
 layout) is cached per (treedef, leaf signature, density).
 
+The ORDER of one step's dispatches is owned by a ``Schedule``
+(``repro.core.overlap``, ``TrainConfig.schedule``): ``sequential`` is
+the historical compress-all → one-transfer → apply barrier; ``chunked``
+partitions the tree into reverse-parameter-order chunks (§5.6 — the
+order backprop emits gradients) and dispatches each chunk's collective
+as soon as that chunk is packed, bitwise identical to sequential;
+``stale1`` double-buffers the packed messages and communicates step
+*t-1*'s buffer during step *t*.
+
 Like the legacy ``rgc_apply`` it replaces (now a shim over this), it must
 run inside a fully-manual shard_map region whose axis names include the
 transport's ``sync_axes``; every leaf is a raw local shard and gradients
@@ -56,11 +65,13 @@ from . import registry
 from .api import Compressor, Correction, DispatchPolicy, Transport
 from .compressors import _Base as _CompressorBase  # noqa: F401 (registration)
 from .correction import LocalClip, MomentumCorrection, split_corrections
-from .dispatch import FixedPolicy, SizeBasedPolicy
+from .dispatch import FixedPolicy, SizeBasedPolicy, leaf_nbytes
 from .instrument import NullTimer
+from .overlap import SequentialSchedule, partition_chunks
 from .residual import (LeafState, accumulate, accumulate_arena,
                        mask_communicated)
 from .sync import message_len
+from .transport import DEFAULT_BUCKET_BYTES
 from .transport import FusedAllgather  # noqa: F401 (registration)
 
 
@@ -126,6 +137,14 @@ class GradientSync:
     # parameter bag threaded to compressor factories (backend,
     # bsearch_interval, trim_eps, ...)
     compressor_params: dict = field(default_factory=dict)
+    # §5.6 overlap scheduler (core.overlap): owns the dispatch order of
+    # the step — "sequential" full-tree barrier (default), "chunked"
+    # per-chunk pipelined dispatch, "stale1" one-step-delayed double
+    # buffering. None -> SequentialSchedule.
+    schedule: Any = None
+    # byte budget of one "chunked" pipeline chunk (raw gradient bytes;
+    # shares the bucket_bytes knob/default with the bucketed transport)
+    chunk_bytes: int = DEFAULT_BUCKET_BYTES
     # stage-timer hook (core.instrument): NullTimer (free, trace-safe) by
     # default; bench_transport swaps in a WallClockTimer for eager runs
     timer: Any = None
@@ -135,6 +154,8 @@ class GradientSync:
     def __post_init__(self) -> None:
         if self.timer is None:
             self.timer = NullTimer()
+        if self.schedule is None:
+            self.schedule = SequentialSchedule()
         corr = list(self.corrections or ())
         names = {c.name for c in corr}
         if self.local_clip is not None and "local_clip" not in names:
@@ -201,11 +222,14 @@ class GradientSync:
     # -- the transform ------------------------------------------------------
 
     def init(self, params: Any) -> Any:
-        """State tree congruent with params (LeafState at each leaf).
+        """Optimizer state for ``params``.
 
-        Each leaf's state comes from the compressor the policy assigns it
+        The base is a params-congruent tree of ``LeafState`` — each
+        leaf's state comes from the compressor the policy assigns it
         (all built-ins share ``residual.init_leaf``; custom compressors
-        may carry extra state).
+        may carry extra state). The schedule may wrap it: ``stale1``
+        returns an ``overlap.ScheduleState`` carrying the zero-count
+        pending message buffers alongside the leaf tree.
         """
         leaves, treedef = jax.tree.flatten(params)
         paths = [jax.tree_util.keystr(kp) for kp, _ in
@@ -216,7 +240,8 @@ class GradientSync:
             comp = self._leaf_compressor(name, path)
             out.append(comp.init_leaf(p, momentum=self.uses_momentum_buffer,
                                       residual_dtype=self.residual_dtype))
-        return jax.tree.unflatten(treedef, out)
+        leaf_state = jax.tree.unflatten(treedef, out)
+        return self.schedule.init_state(self, params, leaf_state)
 
     # -- the per-step plan (cached; satellite of the arena refactor) --------
 
@@ -237,10 +262,23 @@ class GradientSync:
 
         paths = [jax.tree_util.keystr(kp) for kp, _ in
                  jax.tree_util.tree_flatten_with_path(grads)[0]]
+        plan = self._plan_leaves(range(len(leaves_g)), paths, leaves_g,
+                                 density, all_dense)
+        self._plans[key] = plan
+        return plan
+
+    def _plan_leaves(self, indices, paths, leaves_g, density: float,
+                     all_dense: bool, aid_base: int = 0) -> _StepPlan:
+        """Dispatch plan restricted to the leaves in ``indices`` (in the
+        given order) — the whole tree for the sequential plan, one
+        chunk's leaves for the chunked schedule's per-chunk plans.
+        Arena grouping happens WITHIN the index set, so a chunk's fused
+        operations touch only that chunk's leaves."""
         dense: list[int] = []
         sparse: list[tuple[int, Compressor, int]] = []
         fusable: dict[tuple[str, str], list] = {}
-        for i, g in enumerate(leaves_g):
+        for i in indices:
+            g = leaves_g[i]
             name = ("dense" if all_dense
                     else self.policy.compressor_for(paths[i], g))
             if name == "dense":
@@ -260,14 +298,56 @@ class GradientSync:
 
         groups, group_comps = [], []
         for aid, ((name, dtype), slots) in enumerate(fusable.items()):
-            groups.append(arena.build_group(aid, name, dtype, slots))
+            groups.append(arena.build_group(aid_base + aid, name, dtype,
+                                            slots))
             group_comps.append(self.compressor(name))
 
-        plan = _StepPlan(paths=tuple(paths), dense=tuple(dense),
-                         sparse=tuple(sparse), groups=tuple(groups),
+        return _StepPlan(paths=tuple(paths[i] for i in indices),
+                         dense=tuple(dense), sparse=tuple(sparse),
+                         groups=tuple(groups),
                          group_comps=tuple(group_comps))
-        self._plans[key] = plan
-        return plan
+
+    def _chunk_plans(self, grads: Any, treedef: Any, leaves_g: list,
+                     density: float,
+                     all_dense: bool) -> tuple[_StepPlan, ...]:
+        """Per-chunk dispatch plans for the ``chunked`` schedule (cached).
+
+        ``overlap.partition_chunks`` splits the leaf set into
+        reverse-parameter-order chunks under ``chunk_bytes`` (raw
+        gradient bytes); each chunk then gets its own ``_plan_leaves``
+        plan, so arenas never span a chunk boundary and every chunk's
+        select/mask/pack feeds its own transport dispatch."""
+        sig = tuple((tuple(g.shape), str(g.dtype)) for g in leaves_g)
+        key = (treedef, sig, density, all_dense, "chunked",
+               self.chunk_bytes)
+        if key in self._plans:
+            return self._plans[key]
+
+        paths = [jax.tree_util.keystr(kp) for kp, _ in
+                 jax.tree_util.tree_flatten_with_path(grads)[0]]
+        chunks = partition_chunks([leaf_nbytes(g) for g in leaves_g],
+                                  self.chunk_bytes)
+        plans = tuple(
+            self._plan_leaves(c.leaves, paths, leaves_g, density,
+                              all_dense, aid_base=1000 * c.cid)
+            for c in chunks)
+        self._plans[key] = plans
+        return plans
+
+    def _pending_zeros(self, params: Any) -> tuple[jax.Array, ...]:
+        """Zero-count wire messages matching the target-density plan's
+        unit order (arena groups, then per-leaf sparse units) — the
+        ``stale1`` schedule's initial double buffer. An all-zeros f32
+        message decodes as count == 0, so applying it is a no-op."""
+        leaves, treedef = jax.tree.flatten(params)
+        plan = self._plan(params, treedef, leaves, self.density,
+                          self.density >= 1.0)
+        pending = [jnp.zeros((g.msg_total,), jnp.float32)
+                   for g in plan.groups]
+        pending += [jnp.zeros((message_len(comp.capacity(k),
+                                           comp.quantized),), jnp.float32)
+                    for _, comp, k in plan.sparse]
+        return tuple(pending)
 
     def _arena_coeffs(self) -> tuple[float, bool]:
         """(momentum, nesterov) of the accumulation-owning correction —
@@ -382,32 +462,58 @@ class GradientSync:
 
     def update(self, grads: Any, state: Any, params: Any, lr: jax.Array,
                *, density: float | None = None) -> tuple[Any, Any]:
-        """One synchronized step. Returns (new_params, new_state)."""
+        """One synchronized step. Returns (new_params, new_state).
+
+        The dispatch ORDER is owned by the configured ``Schedule``
+        (``core.overlap``): ``sequential`` runs compress-all → one
+        transfer → apply (the historical order, reproduced below by the
+        stage helpers it calls), ``chunked`` pipelines per-chunk
+        compress+transfer dispatches, ``stale1`` communicates the
+        previous step's buffer.
+        """
         density = self.density if density is None else density
-        leaves_g, treedef = jax.tree.flatten(grads)
+        return self.schedule.step(self, grads, state, params, lr, density)
+
+    # -- schedule stage helpers (the pipeline's unit operations) ------------
+
+    def _context(self, grads: Any, leaf_state: Any, params: Any):
+        """Flatten the step's trees and run tree-level corrections (e.g.
+        DGC local clipping — its N^{-1/2} norm is GLOBAL over the whole
+        gradient tree, so it must run before any chunking).
+
+        Returns BOTH the raw and the corrected gradient leaves: plans
+        (``_plan`` / ``_chunk_plans`` / ``_pending_zeros``) must be built
+        from the RAW leaves so §5.5 byte-size dispatch keeps seeing the
+        parameter's true storage dtype (a correction like local_clip
+        upcasts bf16 leaves to f32 — the mis-dispatch PR 1/PR 4 pinned
+        out), while the compute stages consume the corrected leaves.
+        """
+        leaves_raw, treedef = jax.tree.flatten(grads)
         leaves_p = treedef.flatten_up_to(params)
-        leaves_s = treedef.flatten_up_to(state)
+        leaves_s = treedef.flatten_up_to(leaf_state)
         n_workers = self.transport.num_workers()
-
-        # density == 1.0 sentinel: RedSync dense warm-up (§5.7)
-        all_dense = density >= 1.0
-        plan = self._plan(grads, treedef, leaves_g, density, all_dense)
-
-        # --- tree-level corrections (e.g. DGC local clipping, N^{-1/2}) ----
+        leaves_g = list(leaves_raw)
         for c in self.corrections:
             leaves_g = c.on_grads(leaves_g, leaves_p, n_workers)
+        return treedef, leaves_raw, leaves_g, leaves_p, leaves_s, n_workers
 
-        # --- pass 1: residual update + selection + message packing ---------
-        # Each stage body routes through the StageTimer hook
-        # (core.instrument): a free passthrough under jit/NullTimer, a
-        # barriered wall-clock sample per stage when bench_transport runs
-        # the pipeline eagerly (the measured Fig 10 decomposition).
-        # ``dispatch_<stage>`` counters record fused-operation launches:
-        # one per arena below, one per leaf in the fallback loop.
+    def _compress_plan(self, plan: _StepPlan, leaves_g: list,
+                       leaves_p: list, leaves_s: list, new_states: list
+                       ) -> tuple[list[jax.Array], list[tuple]]:
+        """Residual update + selection + message packing for every sparse
+        unit of ``plan`` (arena groups first, then per-leaf fallbacks).
+
+        Each stage body routes through the StageTimer hook
+        (core.instrument): a free passthrough under jit/NullTimer, a
+        barriered wall-clock sample per stage when bench_transport runs
+        the pipeline eagerly (the measured Fig 10 decomposition).
+        ``dispatch_<stage>`` counters record fused-operation launches:
+        one per arena, one per leaf in the fallback loop. Returns
+        ``(messages, msg_meta)``; mutates ``new_states`` in place.
+        """
         timer = self.timer
         messages: list[jax.Array] = []
         msg_meta: list[tuple] = []
-        new_states: list[LeafState] = list(leaves_s)
 
         for group, comp in zip(plan.groups, plan.group_comps):
             messages.append(self._update_group(
@@ -436,12 +542,20 @@ class GradientSync:
                 lambda sel=selected: self.transport.pack(sel, comp.quantized)))
             msg_meta.append(("leaf", i, comp, k))
 
-        # --- pass 2: synchronization ---------------------------------------
-        gathered = timer.stage(
+        return messages, msg_meta
+
+    def _gather(self, messages: list[jax.Array]) -> list[jax.Array]:
+        """Dispatch the transport collective for one message batch."""
+        return self.timer.stage(
             "transfer", lambda: self.transport.allgather(messages))
 
-        # --- pass 3: decompress + apply ------------------------------------
-        new_params: list[jax.Array] = list(leaves_p)
+    def _apply_gathered(self, gathered: list[jax.Array],
+                        msg_meta: list[tuple], leaves_p: list,
+                        new_params: list, lr: jax.Array,
+                        n_workers: int) -> None:
+        """Decompress gathered messages and apply the SGD update (mutates
+        ``new_params`` in place)."""
+        timer = self.timer
 
         def _apply(buf, i, comp, k):
             g_sum = comp.decompress(buf, leaves_p[i].size, k)
@@ -463,25 +577,28 @@ class GradientSync:
                     "unpack", lambda b=buf, i=i, c=comp, k=k: _apply(
                         b, i, c, k))
 
-        for i in plan.dense:
-            g_mean = timer.stage(
-                "transfer",
-                lambda i=i: self.transport.allreduce_mean(leaves_g[i]))
-            st = leaves_s[i]
-            if self.weight_decay:
-                g_mean = g_mean + self.weight_decay * \
-                    leaves_p[i].astype(jnp.float32)
-            if self.momentum:
-                u = self.momentum * st.momentum + g_mean
-                upd = (g_mean + self.momentum * u) if self.nesterov else u
-                new_states[i] = st._replace(momentum=u)
-            else:
-                upd = g_mean
-            new_params[i] = (leaves_p[i].astype(jnp.float32)
-                             - lr * upd).astype(leaves_p[i].dtype)
+    def _dense_reduce(self, i: int, leaves_g: list) -> jax.Array:
+        """Dispatch one dense leaf's allreduce-mean collective."""
+        return self.timer.stage(
+            "transfer",
+            lambda: self.transport.allreduce_mean(leaves_g[i]))
 
-        return (jax.tree.unflatten(treedef, new_params),
-                jax.tree.unflatten(treedef, new_states))
+    def _dense_apply(self, i: int, g_mean: jax.Array, leaves_p: list,
+                     leaves_s: list, new_states: list, new_params: list,
+                     lr: jax.Array) -> None:
+        """Momentum-SGD apply of one dense leaf's reduced gradient."""
+        st = leaves_s[i]
+        if self.weight_decay:
+            g_mean = g_mean + self.weight_decay * \
+                leaves_p[i].astype(jnp.float32)
+        if self.momentum:
+            u = self.momentum * st.momentum + g_mean
+            upd = (g_mean + self.momentum * u) if self.nesterov else u
+            new_states[i] = st._replace(momentum=u)
+        else:
+            upd = g_mean
+        new_params[i] = (leaves_p[i].astype(jnp.float32)
+                         - lr * upd).astype(leaves_p[i].dtype)
 
 
 def build_gradient_sync(
@@ -504,6 +621,7 @@ def build_gradient_sync(
     intra_axis: str | None = None,
     fuse_leaves: bool = True,
     fuse_accumulate: bool = False,
+    schedule: str = "sequential",
     timer: Any = None,
     **compressor_params: Any,
 ) -> GradientSync:
@@ -531,6 +649,13 @@ def build_gradient_sync(
     factories ignore knobs they don't consume. ``timer`` is the
     ``StageTimer`` hook shared by the sync loop and the transport
     (``None`` -> ``NullTimer``).
+
+    ``schedule`` names the §5.6 overlap scheduler (``core.overlap``,
+    registry kind ``SCHEDULE``): ``"sequential"`` (default, full-tree
+    barrier), ``"chunked"`` (reverse-parameter-order chunk pipelining,
+    bitwise identical results, chunk byte budget = ``bucket_bytes``), or
+    ``"stale1"`` (one-step-delayed double-buffered sync; its state wraps
+    the LeafState tree in an ``overlap.ScheduleState``).
 
     ``fuse_leaves`` (default on) enables the flat residual arenas: the
     select/mask/pack stages run once per same-dtype arena instead of once
@@ -603,6 +728,9 @@ def build_gradient_sync(
         residual_dtype=residual_dtype,
         fuse_leaves=fuse_leaves,
         fuse_accumulate=fuse_accumulate,
+        schedule=registry.make(registry.SCHEDULE, schedule),
+        chunk_bytes=(DEFAULT_BUCKET_BYTES if bucket_bytes is None
+                     else int(bucket_bytes)),
         corrections=corrections,
         compressor_params=dict(compressor_params),
         timer=timer,

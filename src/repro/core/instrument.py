@@ -32,6 +32,13 @@ Two implementations:
 
 Counters (``count``) record dimensionless stage facts — e.g. the
 bucketed transport's collective count per step — without a barrier.
+
+``set_lane`` opens a named attribution lane: while a lane is set, stage
+times are ADDITIONALLY accumulated under it (``summary()["lanes"]``).
+The ``chunked`` overlap schedule (core.overlap) sets one lane per
+pipeline chunk, giving the per-chunk Fig 10 decomposition
+``benchmarks/bench_transport.py``'s ``measured_overlap`` section
+reports.
 """
 from __future__ import annotations
 
@@ -58,6 +65,9 @@ class NullTimer:
     def count(self, name: str, n: int = 1) -> None:
         pass
 
+    def set_lane(self, lane: str | None) -> None:
+        pass
+
     def summary(self) -> dict:
         return {}
 
@@ -70,27 +80,43 @@ class WallClockTimer:
     def __init__(self) -> None:
         self.times: dict[str, list[float]] = defaultdict(list)
         self.counts: dict[str, int] = defaultdict(int)
+        # per-lane stage attribution (the chunked schedule's per-chunk
+        # lanes): {lane: {stage: total_s}} accumulated alongside the
+        # unlaned totals above
+        self.lane_times: dict[str, dict[str, float]] = defaultdict(
+            lambda: defaultdict(float))
+        self._lane: str | None = None
 
     def stage(self, name: str, thunk: Callable[[], Any]) -> Any:
         t0 = time.perf_counter()
         out = thunk()
         jax.block_until_ready(out)
-        self.times[name].append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.times[name].append(dt)
+        if self._lane is not None:
+            self.lane_times[self._lane][name] += dt
         return out
 
     def count(self, name: str, n: int = 1) -> None:
         self.counts[name] += n
 
+    def set_lane(self, lane: str | None) -> None:
+        self._lane = lane
+
     def reset(self) -> None:
         self.times.clear()
         self.counts.clear()
+        self.lane_times.clear()
+        self._lane = None
 
     def summary(self) -> dict:
         """Per-stage totals/means plus the share of the summed stage time.
 
         ``{"stages": {name: {calls, total_s, mean_ms, share}},
            "counts": {...}, "total_s": float}``; stage order follows
-        ``STAGES`` with any custom stage names appended.
+        ``STAGES`` with any custom stage names appended. When lanes were
+        set (``set_lane``), a ``"lanes"`` key additionally maps each
+        lane to its per-stage second totals.
         """
         totals = {n: sum(ts) for n, ts in self.times.items()}
         grand = sum(totals.values())
@@ -105,5 +131,9 @@ class WallClockTimer:
                 "mean_ms": 1e3 * totals[n] / max(len(ts), 1),
                 "share": totals[n] / grand if grand > 0 else 0.0,
             }
-        return {"stages": stages, "counts": dict(self.counts),
-                "total_s": grand}
+        out = {"stages": stages, "counts": dict(self.counts),
+               "total_s": grand}
+        if self.lane_times:
+            out["lanes"] = {lane: dict(stages_)
+                            for lane, stages_ in self.lane_times.items()}
+        return out

@@ -1,0 +1,291 @@
+"""Overlapped backprop/communication scheduling (RedSync §5.6).
+
+The paper attributes much of its end-to-end win to hiding communication
+behind backprop, and DGC / Agarwal et al. (2103.00543) show that without
+REAL overlap, compression's bandwidth savings fail to become wall-clock
+savings. Until now this repo only *modeled* that overlap
+(``overlap_report`` in ``benchmarks/bench_transport.py``); every
+transport ran strictly after the full gradient tree was materialized —
+one end-of-step barrier.
+
+This module makes the dispatch order a pluggable ``Schedule``
+(``repro.core.api``), registry-addressable via ``TrainConfig.schedule``:
+
+``sequential``
+    The historical order: compress every unit, ONE transport barrier,
+    then unpack/apply. The reference everything else is differenced
+    against.
+
+``chunked``
+    The §5.6 pipelined order. ``partition_chunks`` splits the gradient
+    tree into ordered chunks in REVERSE parameter order — last-layer
+    gradients, first out of backprop, sync first — under the
+    ``bucket_bytes`` byte budget, never splitting a leaf. Each chunk's
+    accumulate/select/mask/pack runs and its transport collective is
+    DISPATCHED immediately, before the next chunk's compute is issued;
+    unpack/apply drains afterwards. Under jit this hands XLA's
+    latency-hiding scheduler one independent collective per chunk to
+    overlap with the remaining chunks' select/pack compute (instead of
+    one full-tree barrier it cannot move); eagerly, jax's non-blocking
+    dispatch overlaps them for real. Every per-unit computation is the
+    same graph as ``sequential`` (the PR-4 pinned numerics make the
+    accumulate/select math graph-shape independent), collectives carry
+    the same bytes, and updates to distinct leaves commute — so params
+    and optimizer state are BITWISE identical to ``sequential``
+    (tests/test_overlap.py, tests/_overlap_prog.py), only the number
+    and order of transport dispatches change.
+
+``stale1``
+    One-step-delayed, double-buffered sync: step *t* COMMUNICATES the
+    messages step *t-1* packed, so on a real wire the collective for
+    step *t-1* overlaps the whole of step *t*'s forward+backward — the
+    maximal §5.6 overlap, bought with one step of staleness on the
+    sparse updates. Residual correctness: a selected value is removed
+    from the residual when packed and applied exactly once, one step
+    later, from the pending buffer — no update is ever dropped or
+    double-applied; only the last step's buffer is left in flight when
+    training stops. Dense (small) leaves stay synchronous, and a §5.7
+    dense warm-up step (density >= 1.0 sentinel) runs fully synchronous
+    while carrying the pending buffer through UNTOUCHED (zero-count
+    when warm-up precedes the first sparse step; still holding a prior
+    sparse step's values if a dense step is interleaved mid-training —
+    applied at the next sparse step, never dropped), so the staleness
+    only ever touches the sparse path. Requires a FIXED target density (the pending buffers
+    are trace-time shapes): the dense warm-up is supported, the DGC
+    intermediate-density ramp is rejected loudly. Convergence cost is
+    measured on the tier-2 harness (tests/test_convergence.py).
+
+Chunk layout invariants (property-tested in tests/test_overlap.py):
+chunks cover every leaf exactly once; concatenating the chunks' leaf
+lists walks the tree in exact reverse parameter order; each chunk's
+byte total respects the budget unless a single oversized leaf forms a
+singleton chunk; a leaf's segment is never split across chunks.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import jax
+
+from . import registry
+from .transport import assign_buckets
+
+
+class Chunk(NamedTuple):
+    """One pipeline chunk: a contiguous run of the REVERSED leaf order."""
+
+    cid: int
+    leaves: tuple[int, ...]    # leaf indices, reverse parameter order
+    nbytes: int                # summed gradient bytes of the chunk
+
+
+def partition_chunks(nbytes: Sequence[int],
+                     chunk_bytes: int) -> tuple[Chunk, ...]:
+    """Greedy reverse-order partition of per-leaf gradient byte sizes.
+
+    Walks the leaves LAST-first (reverse parameter order — the order
+    backprop produces gradients) and closes the current chunk whenever
+    the next leaf would push it past ``chunk_bytes``; a leaf larger than
+    the budget on its own still gets a (singleton) chunk — nothing is
+    ever dropped or split. The greedy budget rule IS
+    ``transport.assign_buckets`` (one definition of the invariant),
+    applied to the reversed leaf order. The byte sizes are the RAW
+    gradient bytes (``size * dtype.itemsize``), not packed-message
+    bytes: chunk formation models when a chunk's gradients exist
+    relative to backprop, before compression has happened.
+    """
+    order = list(reversed(range(len(nbytes))))
+    buckets = assign_buckets([int(nbytes[i]) for i in order], chunk_bytes)
+    return tuple(
+        Chunk(cid, tuple(order[j] for j in bucket),
+              sum(int(nbytes[order[j]]) for j in bucket))
+        for cid, bucket in enumerate(buckets))
+
+
+class ScheduleState(NamedTuple):
+    """Optimizer state of a double-buffered schedule (``stale1``).
+
+    ``leaf`` is the ordinary params-congruent LeafState tree;
+    ``pending`` holds the packed wire messages of the PREVIOUS step
+    (zero-count buffers at init), in the static unit order of the
+    target-density plan."""
+
+    leaf: Any
+    pending: tuple[jax.Array, ...]
+
+
+class SequentialSchedule:
+    """Full-tree barrier order: compress all -> one transfer -> apply."""
+
+    name = "sequential"
+
+    def init_state(self, sync, params, leaf_state):
+        return leaf_state
+
+    def wrap_state_specs(self, leaf_specs, replicated):
+        """Partition specs for the full schedule state, given the
+        LeafState tree's specs (no extra state here)."""
+        return leaf_specs
+
+    def step(self, sync, grads, state, params, lr, density):
+        all_dense = density >= 1.0
+        (treedef, leaves_raw, leaves_g, leaves_p, leaves_s,
+         n_workers) = sync._context(grads, state, params)
+        # plan from the RAW leaves (§5.5 dispatch on true storage dtype)
+        plan = sync._plan(grads, treedef, leaves_raw, density, all_dense)
+        new_states = list(leaves_s)
+        new_params = list(leaves_p)
+
+        messages, meta = sync._compress_plan(
+            plan, leaves_g, leaves_p, leaves_s, new_states)
+        gathered = sync._gather(messages)
+        sync._apply_gathered(gathered, meta, leaves_p, new_params, lr,
+                             n_workers)
+        for i in plan.dense:
+            g_mean = sync._dense_reduce(i, leaves_g)
+            sync._dense_apply(i, g_mean, leaves_p, leaves_s, new_states,
+                              new_params, lr)
+        return (jax.tree.unflatten(treedef, new_params),
+                jax.tree.unflatten(treedef, new_states))
+
+
+class ChunkedSchedule:
+    """§5.6 chunk-pipelined order: per chunk (reverse parameter order),
+    compress then DISPATCH the transport immediately; drain unpack/apply
+    after every chunk's collective is in flight. Bitwise identical to
+    ``sequential`` — only dispatch count/order differ."""
+
+    name = "chunked"
+
+    def init_state(self, sync, params, leaf_state):
+        return leaf_state
+
+    def wrap_state_specs(self, leaf_specs, replicated):
+        return leaf_specs
+
+    def step(self, sync, grads, state, params, lr, density):
+        all_dense = density >= 1.0
+        (treedef, leaves_raw, leaves_g, leaves_p, leaves_s,
+         n_workers) = sync._context(grads, state, params)
+        # chunk layout + plans from the RAW leaves (§5.5 dispatch and
+        # chunk byte budgeting on the true storage dtype)
+        plans = sync._chunk_plans(grads, treedef, leaves_raw, density,
+                                  all_dense)
+        new_states = list(leaves_s)
+        new_params = list(leaves_p)
+        timer = sync.timer
+
+        # dispatch loop: as soon as a chunk's gradients exist, issue its
+        # select/mask/pack and its collective; do NOT consume any
+        # gathered result yet (consuming would serialize the pipeline)
+        inflight = []
+        for cid, plan in enumerate(plans):
+            timer.set_lane(f"chunk{cid}")
+            msgs, meta = sync._compress_plan(
+                plan, leaves_g, leaves_p, leaves_s, new_states)
+            gathered = sync._gather(msgs) if msgs else []
+            dense_means = [(i, sync._dense_reduce(i, leaves_g))
+                           for i in plan.dense]
+            timer.set_lane(None)
+            inflight.append((cid, meta, gathered, dense_means))
+
+        # drain loop: every chunk's collective has been issued; unpack
+        # and apply in the same chunk order
+        for cid, meta, gathered, dense_means in inflight:
+            timer.set_lane(f"chunk{cid}")
+            sync._apply_gathered(gathered, meta, leaves_p, new_params, lr,
+                                 n_workers)
+            for i, g_mean in dense_means:
+                sync._dense_apply(i, g_mean, leaves_p, leaves_s,
+                                  new_states, new_params, lr)
+            timer.set_lane(None)
+        return (jax.tree.unflatten(treedef, new_params),
+                jax.tree.unflatten(treedef, new_states))
+
+
+class Stale1Schedule:
+    """One-step-delayed double-buffered sync (§5.6 maximal overlap).
+
+    Step *t* packs its own messages into the pending buffer and
+    communicates + applies the messages packed at step *t-1*. Dense
+    leaves and the §5.7 dense warm-up stay synchronous."""
+
+    name = "stale1"
+
+    def init_state(self, sync, params, leaf_state):
+        return ScheduleState(leaf=leaf_state,
+                             pending=sync._pending_zeros(params))
+
+    def wrap_state_specs(self, leaf_specs, replicated):
+        # the pending wire messages are replicated like any packed
+        # message (``replicated`` is a prefix spec over the whole tuple)
+        return ScheduleState(leaf=leaf_specs, pending=replicated)
+
+    def step(self, sync, grads, state, params, lr, density):
+        if not isinstance(state, ScheduleState):
+            raise TypeError(
+                "stale1 schedule state must come from GradientSync.init "
+                "(ScheduleState with a pending message buffer)")
+        all_dense = density >= 1.0
+        if not all_dense and density != sync.density:
+            raise ValueError(
+                f"stale1 requires a fixed target density (pending message "
+                f"buffers are trace-time shapes): got step density "
+                f"{density} vs configured {sync.density}. The §5.7 dense "
+                f"warm-up (density >= 1.0) is supported; the DGC "
+                f"intermediate-density ramp is not.")
+        (treedef, leaves_raw, leaves_g, leaves_p, leaves_s,
+         n_workers) = sync._context(grads, state.leaf, params)
+        new_states = list(leaves_s)
+        new_params = list(leaves_p)
+
+        if all_dense:
+            # §5.7 dense warm-up stage: every leaf synchronous dense
+            # allreduce. The pending buffer is carried through UNCHANGED
+            # — zero-count when warm-up precedes the first sparse step
+            # (the normal case), and still holding a prior sparse step's
+            # packed-but-unapplied values if a caller interleaves a
+            # dense step mid-training: those values left the residual at
+            # selection and may only be applied, never dropped, so they
+            # ride along until the next sparse step communicates them.
+            for i in range(len(leaves_g)):
+                g_mean = sync._dense_reduce(i, leaves_g)
+                sync._dense_apply(i, g_mean, leaves_p, leaves_s,
+                                  new_states, new_params, lr)
+            new_pending = state.pending
+        else:
+            # RAW-leaf plan: same key as the init-time _pending_zeros
+            # plan, so the pending buffer layout always matches meta
+            plan = sync._plan(grads, treedef, leaves_raw, density, False)
+            # pack step t's messages (residual masked NOW, at selection)
+            messages, meta = sync._compress_plan(
+                plan, leaves_g, leaves_p, leaves_s, new_states)
+            # ...but communicate and apply step t-1's buffer: the plan is
+            # static across steps, so the meta describes both message sets
+            gathered = sync._gather(list(state.pending))
+            sync._apply_gathered(gathered, meta, leaves_p, new_params, lr,
+                                 n_workers)
+            for i in plan.dense:
+                g_mean = sync._dense_reduce(i, leaves_g)
+                sync._dense_apply(i, g_mean, leaves_p, leaves_s,
+                                  new_states, new_params, lr)
+            new_pending = tuple(messages)
+
+        return (jax.tree.unflatten(treedef, new_params),
+                ScheduleState(leaf=jax.tree.unflatten(treedef, new_states),
+                              pending=new_pending))
+
+
+@registry.register(registry.SCHEDULE, "sequential")
+def _sequential(**_: Any) -> SequentialSchedule:
+    return SequentialSchedule()
+
+
+@registry.register(registry.SCHEDULE, "chunked")
+def _chunked(**_: Any) -> ChunkedSchedule:
+    return ChunkedSchedule()
+
+
+@registry.register(registry.SCHEDULE, "stale1")
+def _stale1(**_: Any) -> Stale1Schedule:
+    return Stale1Schedule()

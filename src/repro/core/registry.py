@@ -1,7 +1,8 @@
 """String-addressable component registry for the compression API.
 
 Every pluggable piece of the gradient-sync pipeline — ``Compressor``,
-``Transport``, ``DispatchPolicy``, ``Correction`` — registers a factory
+``Transport``, ``DispatchPolicy``, ``Correction``, ``Schedule`` —
+registers a factory
 under a ``(kind, name)`` key so configs can name components by string
 (``TrainConfig.optimizer = "threshold_bsearch"``) and extensions can add
 new ones without touching core code:
@@ -27,6 +28,7 @@ COMPRESSOR = "compressor"
 TRANSPORT = "transport"
 DISPATCH_POLICY = "dispatch_policy"
 CORRECTION = "correction"
+SCHEDULE = "schedule"
 
 _REGISTRY: dict[str, dict[str, Callable[..., Any]]] = {}
 

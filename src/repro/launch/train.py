@@ -52,6 +52,13 @@ def main() -> None:
     ap.add_argument("--no-fuse-leaves", action="store_true",
                     help="disable the flat residual arenas (per-leaf "
                     "mask/select/pack baseline)")
+    ap.add_argument("--schedule", default="sequential",
+                    choices=list(registry.names(registry.SCHEDULE)),
+                    help="§5.6 overlap scheduler: sequential (one "
+                    "full-tree transport barrier), chunked (pipelined "
+                    "per-chunk dispatch in reverse parameter order, "
+                    "bitwise-identical results), stale1 (one-step-"
+                    "delayed double-buffered sync)")
     ap.add_argument("--backend", default=None, choices=["jnp", "pallas"],
                     help="selection-kernel backend (pallas auto-compiles "
                     "on TPU, interprets elsewhere)")
@@ -78,7 +85,7 @@ def main() -> None:
 
     tc = TrainConfig(lr=args.lr, momentum=args.momentum,
                      optimizer=args.optimizer, transport=args.transport,
-                     density=args.density,
+                     schedule=args.schedule, density=args.density,
                      warmup_steps_per_stage=args.warmup_steps_per_stage,
                      fuse_leaves=not args.no_fuse_leaves)
     overrides = {}

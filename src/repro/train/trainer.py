@@ -92,8 +92,10 @@ def make_gradient_sync(tc: TrainConfig, mesh: Optional[Mesh],
     "quantized(trimmed_topk)") — see repro.core.registry.
     ``tc.transport`` picks the collective backend; ``tc.bucket_bytes`` /
     ``tc.intra_axis`` parameterize the bucketed / hierarchical backends.
-    ``timer`` threads a StageTimer hook through the pipeline (eager
-    benchmark runs); None = free NullTimer.
+    ``tc.schedule`` picks the §5.6 overlap scheduler (sequential /
+    chunked / stale1 — repro.core.overlap). ``timer`` threads a
+    StageTimer hook through the pipeline (eager benchmark runs); None =
+    free NullTimer.
     """
     return build_gradient_sync(
         tc.optimizer,
@@ -111,6 +113,7 @@ def make_gradient_sync(tc: TrainConfig, mesh: Optional[Mesh],
         intra_axis=tc.intra_axis,
         fuse_leaves=tc.fuse_leaves,
         fuse_accumulate=tc.fuse_accumulate,
+        schedule=tc.schedule,
         backend=tc.backend,
         timer=timer,
     )
@@ -186,6 +189,11 @@ def make_train_step(
     sspecs = jax.tree.map(
         lambda s: _leaf_state_specs(s, sync.uses_momentum_buffer), pspecs,
         is_leaf=lambda x: isinstance(x, P))
+    # a double-buffered schedule (stale1) wraps the LeafState tree with
+    # its pending message buffers — replicate those (prefix P() spec)
+    wrap = getattr(sync.schedule, "wrap_state_specs", None)
+    if wrap is not None:
+        sspecs = wrap(sspecs, P())
     bspec = P(baxes)     # shard dim 0 over all batch axes
 
     def inner_sync(grads, params, rgc_state, lr):

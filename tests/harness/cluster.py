@@ -95,6 +95,7 @@ def train_and_eval(
     steps: int,
     *,
     transport: str = "fused_allgather",
+    schedule: str | None = None,
     bucket_bytes: int | None = None,
     intra_axis: str | None = None,
     fuse_leaves: bool | None = None,
@@ -118,8 +119,9 @@ def train_and_eval(
     ``nodes=N`` runs on the 2-axis ``("node","local")`` mesh (N nodes x
     devices/N locals) instead of the flat ``("data",)`` mesh — the
     hierarchical transport's home. ``bucket_bytes`` / ``intra_axis`` /
-    ``fuse_leaves`` / ``backend`` parameterize the transport / flat-arena
-    / selection-kernel knobs (None = the TrainConfig defaults).
+    ``fuse_leaves`` / ``backend`` / ``schedule`` parameterize the
+    transport / flat-arena / selection-kernel / §5.6-overlap-scheduler
+    knobs (None = the TrainConfig defaults).
 
     Returns ``{"held_loss", "losses", "num_devices", "steps", "digest"}``;
     ``losses`` is the per-step training-loss trace (loss is pmean'd over
@@ -147,7 +149,8 @@ def train_and_eval(
                      dense_warmup=dense_warmup, seed=seed)
     overrides = {k: v for k, v in
                  (("bucket_bytes", bucket_bytes), ("intra_axis", intra_axis),
-                  ("fuse_leaves", fuse_leaves), ("backend", backend))
+                  ("fuse_leaves", fuse_leaves), ("backend", backend),
+                  ("schedule", schedule))
                  if v is not None}
     if overrides:
         tc = dataclasses.replace(tc, **overrides)

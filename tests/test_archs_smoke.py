@@ -76,8 +76,17 @@ def test_serve_prefill_decode(arch):
 
 
 def test_short_training_reduces_loss(arch):
-    """30 steps of RGC training on learnable bigram data must reduce loss.
-    (Integration: model + data + RGC optimizer end to end.)"""
+    """Short RGC training on learnable bigram data must reduce loss.
+    (Integration: model + data + RGC optimizer end to end.)
+
+    The learning check compares TRAILING- vs LEADING-window means of the
+    per-step loss trajectory, not a single final checkpoint: single-step
+    values sit on top of per-batch noise and (for MoE at smoke scale)
+    the router-settling non-monotonicity of the first ~40 steps, so a
+    ulp-level numeric change could flip a marginal one-step comparison
+    while the trajectory is unambiguously learning. Window means are
+    insensitive to both.
+    """
     from repro.data import bigram_batches
     cfg = get_config(arch, smoke=True)
     # local gradient clipping (§5.6, the paper's DGC-inherited technique)
@@ -86,10 +95,10 @@ def test_short_training_reduces_loss(arch):
                      density=0.05, optimizer="rgc", local_clip=1.0)
     tr = Trainer(cfg, tc)
     model = tr.model
-    # MoE held-out loss is non-monotone over the first ~40 steps at smoke
-    # scale (routing settles before the experts learn): give that family
-    # a longer horizon so the assertion tests learning, not router noise
-    bsz, seq = 8, 64
+    # MoE loss is non-monotone over the first ~40 steps at smoke scale
+    # (routing settles before the experts learn): give that family a
+    # longer horizon so the windows straddle the settled regime
+    bsz, seq, window = 8, 64, 10
     steps = 60 if cfg.family == "moe" else 30
     stub = {k: v for k, v in model.make_train_batch(bsz, seq).items()
             if k != "tokens"}
@@ -98,17 +107,16 @@ def test_short_training_reduces_loss(arch):
         for b in src:
             yield {**b, **stub}
 
-    # held-out batch: same bigram chain (same seed -> same transition
-    # matrix), a batch index the trainer never reaches
     src = bigram_batches(cfg.vocab_size, bsz, seq, seed=2)
     train_batches = (next(src) for _ in range(steps))
-    held_src = bigram_batches(cfg.vocab_size, bsz, seq, seed=2)
-    for _ in range(60):
-        held_out = next(held_src)
-    held_out = {**{k: jnp.asarray(v) for k, v in held_out.items()}, **stub}
 
     state = tr.init_state()
-    l0 = float(model.loss(state.params, held_out))
-    state = tr.run(state, with_stub(train_batches), steps, log_every=0)
-    l1 = float(model.loss(state.params, held_out))
-    assert l1 < l0, f"{arch}: loss {l0:.3f} -> {l1:.3f} did not improve"
+    losses: list[float] = []
+    tr.run(state, with_stub(train_batches), steps, log_every=0,
+           on_metrics=lambda step, dens, loss: losses.append(loss))
+    lead = float(np.mean(losses[:window]))
+    trail = float(np.mean(losses[-window:]))
+    assert trail < lead, (
+        f"{arch}: trailing-window loss {trail:.3f} not below "
+        f"leading-window {lead:.3f} (trajectory {losses[:3]} ... "
+        f"{losses[-3:]})")

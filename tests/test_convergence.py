@@ -21,7 +21,7 @@ though the harness's fully-manual mesh path also runs on legacy jax).
 """
 import pytest
 
-from harness import convergence_pair
+from harness import convergence_pair, run_cluster
 
 STEPS = 200
 DEVICES = 8
@@ -51,6 +51,33 @@ def test_corrected_sparse_matches_dense(arch):
     assert sparse <= dense * (1 + TOLERANCE), (
         f"{arch}: sparse {sparse:.4f} vs dense {dense:.4f} "
         f"(+{(sparse / dense - 1) * 100:.1f}%, tolerance "
+        f"{TOLERANCE * 100:.0f}%)")
+
+
+@pytest.mark.tier2
+def test_stale1_matches_sequential_sparse():
+    """The §5.6 ``stale1`` schedule (communicate step t-1's compressed
+    residual during step t — maximal backprop/comm overlap, one step of
+    sparse staleness) with the full DGC pipeline + §5.7 dense warm-up:
+    its held-out loss must land within 5% of the SAME sparse pipeline
+    run sequentially — the staleness cost the overlap is bought with,
+    measured end-to-end on the 8-way simulated cluster."""
+    common = dict(arch="paper-lstm", steps=STEPS,
+                  optimizer="momentum+clip(threshold_bsearch)",
+                  density=0.01, warmup_steps_per_stage=25,
+                  dense_warmup=True, lr=0.1, momentum=0.9,
+                  local_clip=1.0, seed=0)
+    seq = run_cluster(dict(common, schedule="sequential"), devices=DEVICES)
+    stale = run_cluster(dict(common, schedule="stale1"), devices=DEVICES)
+    seq_loss, stale_loss = seq["held_loss"], stale["held_loss"]
+
+    assert seq_loss < INIT_LOSS - 0.5, \
+        f"sequential-sparse run did not learn: {seq_loss}"
+    assert stale_loss < INIT_LOSS - 0.5, \
+        f"stale1 run did not learn: {stale_loss}"
+    assert stale_loss <= seq_loss * (1 + TOLERANCE), (
+        f"stale1 {stale_loss:.4f} vs sequential-sparse {seq_loss:.4f} "
+        f"(+{(stale_loss / seq_loss - 1) * 100:.1f}%, tolerance "
         f"{TOLERANCE * 100:.0f}%)")
 
 

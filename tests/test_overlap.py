@@ -1,0 +1,456 @@
+"""Overlap-scheduler tests (§5.6): chunk-partitioner invariants
+(hypothesis + deterministic grid twin), the chunked-vs-sequential
+differential battery (every transport x fuse_leaves, in-process p=1 and
+the 8-device subprocess cluster), per-chunk dispatch/lane accounting,
+and the stale1 double-buffer semantics against a hand-rolled two-step
+reference."""
+import os
+
+import numpy as np
+import pytest
+
+OVERLAP_PROG = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "_overlap_prog.py")
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+SIZES = {"big": 300_000, "mid": 96 * 1024 + 3, "mid2": 33_001,
+         "small": 1_000}
+CHUNK_BYTES = 260_000
+
+
+def _tree(seed=0, sizes=SIZES):
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    params = {k: jnp.asarray(rng.standard_normal(n), jnp.float32)
+              for k, n in sizes.items()}
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+    return params, grads
+
+
+def _run(params, grads, schedule, steps=3, jit=True, timer=None, **kw):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_gradient_sync
+    sync = build_gradient_sync(
+        kw.pop("spec", "rgc"), sync_axes=(), density=0.01,
+        dense_threshold_bytes=2048, schedule=schedule,
+        bucket_bytes=kw.pop("bucket_bytes", CHUNK_BYTES), timer=timer,
+        **kw)
+    state = sync.init(params)
+    step = (lambda p, st: sync.update(grads, st, p, jnp.float32(0.1)))
+    if jit:
+        step = jax.jit(step)
+    p = params
+    for _ in range(steps):
+        p, state = step(p, state)
+    return p, state
+
+
+def _assert_bitwise(a, b):
+    import jax
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype
+        assert np.array_equal(x, y, equal_nan=True), \
+            f"max|d|={np.max(np.abs(x.astype(np.float64) - y))}"
+
+
+# ---------------------------------------------------------------------------
+# chunk partitioner invariants
+# ---------------------------------------------------------------------------
+
+def _check_partition(sizes, budget):
+    from repro.core.overlap import partition_chunks
+    chunks = partition_chunks(sizes, budget)
+    # every leaf exactly once, never split, in exact REVERSE parameter
+    # order across the chunk sequence
+    flat = [i for c in chunks for i in c.leaves]
+    assert flat == list(reversed(range(len(sizes))))
+    assert [c.cid for c in chunks] == list(range(len(chunks)))
+    for c in chunks:
+        assert c.nbytes == sum(sizes[i] for i in c.leaves)
+        # byte budget respected, except a single oversized leaf
+        assert c.nbytes <= budget or len(c.leaves) == 1
+    # greedy maximality: the next chunk's first leaf would not have fit
+    for a, b in zip(chunks, chunks[1:]):
+        assert a.nbytes + sizes[b.leaves[0]] > budget
+
+
+def test_partition_grid():
+    """Deterministic twin of the hypothesis property (runs even without
+    hypothesis installed)."""
+    grids = [
+        ([4], 4), ([4], 1), ([1, 2, 3, 4, 5], 5), ([5, 4, 3, 2, 1], 5),
+        ([10, 10, 10], 10), ([10, 10, 10], 30), ([10, 10, 10], 29),
+        ([100, 1, 1, 1, 100], 3), ([7] * 13, 20), ([1] * 64, 8),
+        ([1 << 22, 128, 1 << 22], 1 << 20),
+    ]
+    for sizes, budget in grids:
+        _check_partition(sizes, budget)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_partition_property():
+    @given(st.lists(st.integers(1, 5000), min_size=1, max_size=40),
+           st.integers(1, 20_000))
+    @settings(max_examples=100, deadline=None)
+    def prop(sizes, budget):
+        _check_partition(sizes, budget)
+    prop()
+
+
+def test_partition_rejects_bad_budget():
+    from repro.core.overlap import partition_chunks
+    with pytest.raises(ValueError):
+        partition_chunks([1, 2], 0)
+    with pytest.raises(ValueError):
+        partition_chunks([1, 2], -4)
+
+
+def test_chunk_plans_cover_all_arena_slots():
+    """The per-chunk plans partition the leaf set exactly: every leaf
+    lands in exactly one chunk plan, as an arena slot, a per-leaf sparse
+    unit, or a dense unit — never twice, never split."""
+    import jax
+
+    from repro.core import build_gradient_sync
+    params, grads = _tree()
+    sync = build_gradient_sync("rgc", sync_axes=(), density=0.01,
+                               dense_threshold_bytes=2048,
+                               schedule="chunked",
+                               bucket_bytes=CHUNK_BYTES)
+    leaves_g, treedef = jax.tree.flatten(grads)
+    plans = sync._chunk_plans(grads, treedef, leaves_g, 0.01, False)
+    assert len(plans) >= 2, "tree did not split into multiple chunks"
+    seen = []
+    for plan in plans:
+        for g in plan.groups:
+            seen.extend(slot.leaf for slot in g.slots)
+        seen.extend(i for i, _, _ in plan.sparse)
+        seen.extend(plan.dense)
+    assert sorted(seen) == list(range(len(leaves_g)))
+    assert len(seen) == len(set(seen))
+
+
+# ---------------------------------------------------------------------------
+# chunked == sequential differential (single worker, jit, all transports)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fuse", [False, True])
+@pytest.mark.parametrize("transport", ["fused_allgather",
+                                       "bucketed_allgather",
+                                       "per_leaf_allgather",
+                                       "hierarchical"])
+def test_chunked_bitwise_sequential(transport, fuse):
+    params, grads = _tree()
+    ref = _run(params, grads, "sequential", transport=transport,
+               fuse_leaves=fuse)
+    got = _run(params, grads, "chunked", transport=transport,
+               fuse_leaves=fuse)
+    _assert_bitwise(got, ref)
+
+
+def test_chunked_bitwise_sequential_with_corrections():
+    params, grads = _tree()
+    kw = dict(spec="momentum+clip(threshold_bsearch)", local_clip=1.0,
+              momentum=0.9)
+    ref = _run(params, grads, "sequential", **kw)
+    got = _run(params, grads, "chunked", **kw)
+    _assert_bitwise(got, ref)
+
+
+def test_chunked_all_dense_matches_sequential():
+    """density >= 1.0 sentinel (§5.7 warm-up): chunked still bitwise."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_gradient_sync
+    params, grads = _tree()
+
+    def run(schedule):
+        sync = build_gradient_sync("rgc", sync_axes=(), density=0.01,
+                                   schedule=schedule,
+                                   bucket_bytes=CHUNK_BYTES)
+        state = sync.init(params)
+        return jax.jit(lambda p, st: sync.update(
+            grads, st, p, jnp.float32(0.1), density=1.0))(params, state)
+
+    _assert_bitwise(run("chunked"), run("sequential"))
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting: the pipelining is real, not a silent fallback
+# ---------------------------------------------------------------------------
+
+def test_chunked_issues_multiple_transport_dispatches():
+    """chunked must dispatch >= 2 transport collectives per step (one per
+    chunk carrying sparse messages) where sequential dispatches exactly
+    one fused collective."""
+    from repro.core import WallClockTimer
+    params, grads = _tree()
+    steps = 2
+
+    t_seq = WallClockTimer()
+    _run(params, grads, "sequential", steps=steps, jit=False, timer=t_seq)
+    t_chk = WallClockTimer()
+    _run(params, grads, "chunked", steps=steps, jit=False, timer=t_chk)
+
+    seq = t_seq.summary()["counts"]["collectives"] / steps
+    chk = t_chk.summary()["counts"]["collectives"] / steps
+    assert seq == 1
+    assert chk >= 2, f"chunked fell back to one barrier ({chk}/step)"
+    # same messages in total, just spread over more dispatches
+    assert (t_chk.summary()["counts"]["messages"]
+            >= t_seq.summary()["counts"]["messages"])
+
+
+def test_chunk_lanes_recorded():
+    """The per-chunk StageTimer lane: every chunk gets its own stage
+    attribution, under the Fig 10 stage names."""
+    from repro.core import WallClockTimer
+    timer = WallClockTimer()
+    params, grads = _tree()
+    _run(params, grads, "chunked", steps=1, jit=False, timer=timer)
+    lanes = timer.summary().get("lanes", {})
+    assert len(lanes) >= 2
+    for lane, stages in lanes.items():
+        assert lane.startswith("chunk")
+        assert "select" in stages or "transfer" in stages
+    # lane stage names are a subset of the canonical stage set
+    from repro.core import STAGES
+    for stages in lanes.values():
+        assert set(stages) <= set(STAGES)
+
+
+# ---------------------------------------------------------------------------
+# stale1: hand-rolled two-step reference + guards
+# ---------------------------------------------------------------------------
+
+def test_stale1_matches_hand_rolled_reference():
+    """One tiny leaf, exact_topk, no momentum, single worker: stale1 must
+    equal a hand-rolled Alg 4 loop that applies each step's selection one
+    step late (zero-count at t=0) — bitwise, params and residual."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_gradient_sync, selection
+    rng = np.random.default_rng(7)
+    n, k, steps, lr = 64, 4, 5, 0.1
+    params = {"w": jnp.asarray(rng.standard_normal(n), jnp.float32)}
+    grads = [{"w": jnp.asarray(rng.standard_normal(n) * 0.1, jnp.float32)}
+             for _ in range(steps)]
+
+    sync = build_gradient_sync("exact_topk", sync_axes=(),
+                               density=k / n, momentum=0.0,
+                               schedule="stale1")
+    state = sync.init(params)
+    p = params
+    for t in range(steps):
+        p, state = sync.update(grads[t], state, p, jnp.float32(lr))
+
+    # hand-rolled: residual accumulate -> exact top-k select -> mask,
+    # apply the PREVIOUS selection (nothing at t=0)
+    w = params["w"]
+    resid = jnp.zeros(n, jnp.float32)
+    prev = None
+    for t in range(steps):
+        v = resid + grads[t]["w"].astype(jnp.float32)
+        sel = selection.exact_topk(v, k)
+        resid = v.at[sel.indices].set(0.0, mode="drop")
+        if prev is not None:
+            dense = jnp.zeros(n, jnp.float32).at[prev.indices].add(
+                prev.values, mode="drop")
+            w = (w.astype(jnp.float32) - lr * (dense / 1)).astype(w.dtype)
+        prev = sel
+
+    np.testing.assert_array_equal(np.asarray(p["w"]), np.asarray(w))
+    np.testing.assert_array_equal(np.asarray(state.leaf["w"].residual),
+                                  np.asarray(resid))
+    # the pending buffer holds exactly the LAST step's packed message
+    from repro.core import sync as sync_lib
+    np.testing.assert_array_equal(np.asarray(state.pending[0]),
+                                  np.asarray(sync_lib.pack(prev, False)))
+
+
+def test_stale1_first_step_applies_nothing():
+    """Step 0 communicates the zero-count init buffer: params must not
+    move on the sparse path (dense leaves DO move — they stay sync)."""
+    import jax.numpy as jnp
+
+    from repro.core import build_gradient_sync
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal(50_000), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.standard_normal(50_000), jnp.float32)}
+    sync = build_gradient_sync("threshold_bsearch", sync_axes=(),
+                               density=0.01, momentum=0.0,
+                               schedule="stale1")
+    state = sync.init(params)
+    p1, state = sync.update(grads, state, params, jnp.float32(0.1))
+    np.testing.assert_array_equal(np.asarray(p1["w"]),
+                                  np.asarray(params["w"]))
+    # second step applies step 0's selection
+    p2, state = sync.update(grads, state, p1, jnp.float32(0.1))
+    assert np.max(np.abs(np.asarray(p2["w"])
+                         - np.asarray(p1["w"]))) > 0
+
+
+def test_stale1_rejects_density_ramp():
+    import jax.numpy as jnp
+    import pytest
+
+    from repro.core import build_gradient_sync
+    params, grads = _tree(sizes={"w": 4_000})
+    sync = build_gradient_sync("rgc", sync_axes=(), density=0.01,
+                               schedule="stale1")
+    state = sync.init(params)
+    with pytest.raises(ValueError, match="fixed target density"):
+        sync.update(grads, state, params, jnp.float32(0.1), density=0.25)
+    # the dense warm-up sentinel is fine
+    sync.update(grads, state, params, jnp.float32(0.1), density=1.0)
+
+
+def test_stale1_dense_step_carries_pending_through():
+    """A §5.7 dense step (density >= 1.0) must carry the pending buffer
+    through UNTOUCHED: zero-count during an initial warm-up (the first
+    sparse step applies nothing stale), and — if a dense step is
+    interleaved after sparse training — still holding the prior sparse
+    step's packed values, which may only be applied later, never
+    dropped."""
+    import jax.numpy as jnp
+
+    from repro.core import build_gradient_sync
+    params, grads = _tree(sizes={"w": 50_000})
+    sync = build_gradient_sync("rgc", sync_axes=(), density=0.01,
+                               schedule="stale1")
+    state = sync.init(params)
+    p, state = sync.update(grads, state, params, jnp.float32(0.1),
+                           density=1.0)
+    for m in state.pending:
+        assert not np.asarray(m).any()
+    # sparse step packs a real message; an interleaved dense step must
+    # preserve it bitwise
+    p, state = sync.update(grads, state, p, jnp.float32(0.1))
+    packed = [np.asarray(m) for m in state.pending]
+    assert any(m.any() for m in packed)
+    p, state = sync.update(grads, state, p, jnp.float32(0.1),
+                           density=1.0)
+    for got, want in zip(state.pending, packed):
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# registry / config plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["sequential", "chunked", "stale1"])
+def test_plan_sees_raw_gradient_dtype_through_update(schedule):
+    """§5.5 dispatch must see the RAW gradient storage dtype even when a
+    correction upcasts the compute leaves (local_clip's pinned_product
+    promotes bf16 -> f32): a 96 KB bf16 leaf stays DENSE through a full
+    ``update`` under every schedule — the PR 1/PR 4 raw-itemsize rule,
+    pinned through the schedule path, not just ``_plan`` directly."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_gradient_sync
+    rng = np.random.default_rng(0)
+    n = 48 * 1024                     # bf16: 96 KB < 128 KB -> dense;
+    #                                   an f32 view would be 192 KB -> sparse
+    params = {"w": jnp.asarray(rng.standard_normal(n), jnp.bfloat16)}
+    grads = {"w": jnp.asarray(rng.standard_normal(n) * 0.01, jnp.bfloat16)}
+    sync = build_gradient_sync("rgc", sync_axes=(), density=0.01,
+                               local_clip=1.0, schedule=schedule)
+    state = sync.init(params)
+    sync.update(grads, state, params, jnp.float32(0.1))
+
+    # the cache holds _StepPlan entries (themselves NamedTuples) and, for
+    # chunked, tuples OF plans — flatten by duck type
+    plans = [p for v in sync._plans.values()
+             for p in ((v,) if hasattr(v, "dense") else v)]
+    assert plans
+    for plan in plans:
+        assert plan.dense == (0,), \
+            f"bf16 96KB leaf mis-dispatched sparse: {plan}"
+        assert not plan.sparse and not plan.groups
+
+
+def test_schedule_registry_names():
+    from repro.core import registry
+    assert set(registry.names(registry.SCHEDULE)) == {
+        "sequential", "chunked", "stale1"}
+
+
+def test_build_rejects_unknown_schedule():
+    from repro.core import build_gradient_sync
+    with pytest.raises(KeyError):
+        build_gradient_sync("rgc", schedule="warp_speed")
+
+
+def test_trainer_chunked_bitwise_sequential():
+    """Real Trainer, single device: a chunked run's params must be
+    bitwise identical to the sequential run's after several steps."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import TrainConfig, get_config
+    from repro.data import bigram_batches
+    from repro.train.trainer import Trainer
+
+    cfg = get_config("paper-lstm", smoke=True)
+
+    def run(schedule):
+        tc = TrainConfig(lr=0.5, density=0.05, optimizer="rgc",
+                         local_clip=1.0, schedule=schedule,
+                         bucket_bytes=200_000)
+        tr = Trainer(cfg, tc)
+        state = tr.init_state()
+        return tr.run(state, bigram_batches(cfg.vocab_size, 4, 32, seed=2),
+                      3, log_every=0)
+
+    ref, got = run("sequential"), run("chunked")
+    _assert_bitwise(got.params, ref.params)
+    _assert_bitwise(got.rgc, ref.rgc)
+
+
+def test_trainer_stale1_runs_and_learns_smoke():
+    """stale1 through the real Trainer (single device): state plumbs
+    through init/run and the loss trajectory still trends down."""
+    from repro.configs import TrainConfig, get_config
+    from repro.data import bigram_batches
+    from repro.train.trainer import Trainer
+
+    cfg = get_config("paper-lstm", smoke=True)
+    tc = TrainConfig(lr=0.5, density=0.05, optimizer="rgc",
+                     local_clip=1.0, schedule="stale1")
+    tr = Trainer(cfg, tc)
+    state = tr.init_state()
+    losses = []
+    tr.run(state, bigram_batches(cfg.vocab_size, 8, 64, seed=2), 30,
+           log_every=0,
+           on_metrics=lambda step, dens, loss: losses.append(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+# ---------------------------------------------------------------------------
+# the 8-device differential battery (subprocess: forced host devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", ["fused", "bucketed", "per_leaf",
+                                  "hierarchical", "corrections", "stale1"])
+def test_overlap_prog_8dev(run_prog, case):
+    """chunked bitwise == sequential (params + state + sha256 digest) per
+    transport x fuse_leaves on the 8-device simulated cluster; stale1
+    vs the explicitly delayed sequential reference."""
+    run_prog(OVERLAP_PROG, case)

@@ -3,8 +3,8 @@
   1. every relative markdown link in README.md and docs/*.md resolves to
      an existing file/directory;
   2. every registry-registered component name (compressors, transports,
-     dispatch policies, corrections — aliases included) appears in
-     docs/spec_grammar.md.
+     dispatch policies, corrections, schedules — aliases included)
+     appears in docs/spec_grammar.md.
 
 Usage: PYTHONPATH=src python tools/check_docs.py
 """
@@ -47,7 +47,8 @@ def check_spec_grammar() -> list[str]:
         grammar = f.read()
     errors = []
     for kind in (registry.COMPRESSOR, registry.TRANSPORT,
-                 registry.DISPATCH_POLICY, registry.CORRECTION):
+                 registry.DISPATCH_POLICY, registry.CORRECTION,
+                 registry.SCHEDULE):
         for name in registry.names(kind):
             if f"`{name}`" not in grammar:
                 errors.append(
