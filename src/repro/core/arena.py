@@ -93,6 +93,61 @@ class SegmentGeometry:
     seg_rows: tuple[tuple[int, int], ...]
 
 
+def single_slot_geometry(n: int, k: int,
+                         block: int = ARENA_BLOCK) -> SegmentGeometry:
+    """A one-slot geometry viewing a lone flat leaf as a mini arena.
+
+    Lets the per-leaf compressor paths reuse the segmented kernels (the
+    sampled selector's strided kernels exist only in segmented form) —
+    the slot's padded 2-D view is exactly the per-leaf kernels' own
+    ``_to2d`` layout, so nothing changes but the entry point.
+    """
+    nb = max(1, -(-n // block))
+    return SegmentGeometry(
+        block=block, n_seg=1, nblocks=nb,
+        block_seg=np.zeros(nb, np.int32),
+        block_base=np.arange(nb, dtype=np.int32) * block,
+        block_size=np.full(nb, n, np.int32),
+        seg_sizes=(n,), seg_ks=(k,), seg_rows=((0, nb),))
+
+
+def stack_geometries(geoms: Sequence[SegmentGeometry]) -> SegmentGeometry:
+    """Row-concatenate several arenas' geometries into one super-arena.
+
+    Segment ordinals and row ranges are offset so the combined maps
+    address the vertically stacked ``[sum nblocks, block]`` value array.
+    Per-segment kernel results (stats, counts, buckets) are independent
+    of which rows belong to *other* segments, so running the segmented
+    kernels once over the stack is bitwise running them per arena — this
+    is what lets ``select`` across all arenas of a step issue a single
+    dispatch per search iteration.
+    """
+    if not geoms:
+        raise ValueError("stack_geometries needs at least one geometry")
+    block = geoms[0].block
+    if any(g.block != block for g in geoms):
+        raise ValueError("cannot stack geometries with different blocks")
+    seg_parts, rows_parts = [], []
+    seg_off = row_off = 0
+    sizes: tuple[int, ...] = ()
+    ks: tuple[int, ...] = ()
+    for g in geoms:
+        seg_parts.append(np.asarray(g.block_seg, np.int32) + seg_off)
+        rows_parts.extend((r0 + row_off, r1 + row_off) for r0, r1 in g.seg_rows)
+        sizes += tuple(g.seg_sizes)
+        ks += tuple(g.seg_ks)
+        seg_off += g.n_seg
+        row_off += g.nblocks
+    return SegmentGeometry(
+        block=block, n_seg=seg_off, nblocks=row_off,
+        block_seg=np.concatenate(seg_parts),
+        block_base=np.concatenate(
+            [np.asarray(g.block_base, np.int32) for g in geoms]),
+        block_size=np.concatenate(
+            [np.asarray(g.block_size, np.int32) for g in geoms]),
+        seg_sizes=sizes, seg_ks=ks, seg_rows=tuple(rows_parts))
+
+
 @dataclass(frozen=True)
 class ArenaGroup:
     """A contiguous f32 arena over same-dtype, same-compressor leaves."""

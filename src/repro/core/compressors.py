@@ -7,10 +7,11 @@ state (threshold cache, quantization phase, bsearch refresh interval)
 rides in the per-leaf ``LeafState``.
 
 Registered names: ``dense``, ``exact_topk``, ``trimmed_topk``,
-``threshold_bsearch`` (alias ``threshold_binary_search``), and the
-``quantized(<inner>)`` wrapper. Factories accept the shared parameter bag
-(``backend``, ``bsearch_interval``, ...) and ignore what they don't use,
-so ``registry.make(COMPRESSOR, name, **params)`` works uniformly.
+``threshold_bsearch`` (alias ``threshold_binary_search``),
+``sampled_bsearch``, and the ``quantized(<inner>)`` wrapper. Factories
+accept the shared parameter bag (``backend``, ``bsearch_interval``,
+``sampled_tolerance``, ...) and ignore what they don't use, so
+``registry.make(COMPRESSOR, name, **params)`` works uniformly.
 """
 from __future__ import annotations
 
@@ -22,6 +23,7 @@ import jax.numpy as jnp
 from . import registry
 from . import selection as sel_lib
 from . import sync as sync_lib
+from .cost_model import sample_stride, sampled_capacity
 from .residual import LeafState, init_leaf
 from .selection import Selected
 
@@ -46,6 +48,29 @@ class _Base:
                   residual_dtype: Any = jnp.float32) -> LeafState:
         return init_leaf(param, momentum=momentum,
                          residual_dtype=residual_dtype)
+
+    # --- segmented-arena protocol -------------------------------------
+    # ``segment_spec`` describes this arena's selection to the fused
+    # multi-arena driver (``kernels.segmented.multi_select``), so
+    # GradientSync can run select for EVERY arena of a step in one
+    # dispatch; ``finish_segments`` folds the returned per-segment
+    # thresholds back into the slots' LeafStates.
+
+    def segment_spec(self, geom, states):
+        raise NotImplementedError(
+            f"compressor {self.name!r} has no segmented implementation")
+
+    def finish_segments(self, states, thr):
+        return list(states)
+
+    def compress_segments(self, x2d, geom, states, stats=None):
+        """Single-arena convenience: ``multi_select`` over one part."""
+        from repro.kernels import segmented as kseg
+        spec = self.segment_spec(geom, states)
+        ((sel, thr),) = kseg.multi_select(
+            [(x2d, geom, spec, stats)],
+            use_pallas=self.backend == "pallas")
+        return sel, self.finish_segments(states, thr)
 
     def decompress(self, gathered: jax.Array, size: int, k: int) -> jax.Array:
         return sync_lib.unpack_decompress(
@@ -110,15 +135,13 @@ class TrimmedTopK(_Base):
             return kops.trimmed_topk(flat_v, k), state
         return sel_lib.trimmed_topk(flat_v, k, self.eps), state
 
-    def compress_segments(self, x2d, geom, states, stats=None):
-        """Alg 2 over one arena; mirrors ``compress`` per backend (the
-        pallas per-leaf path uses the kernel-default eps)."""
+    def segment_spec(self, geom, states):
+        """Alg 2 spec; mirrors ``compress`` per backend (the pallas
+        per-leaf path uses the kernel-default eps)."""
         from repro.kernels import segmented as kseg
-        use_pallas = self.backend == "pallas"
-        sel = kseg.trimmed_topk_segments(
-            x2d, geom, use_pallas=use_pallas, stats=stats,
-            **({} if use_pallas else {"eps": self.eps}))
-        return sel, list(states)
+        return kseg.SegmentSpec(
+            alg="trimmed",
+            eps=0.2 if self.backend == "pallas" else self.eps)
 
     def quant_select(self, flat_v: jax.Array, k: int,
                      phase: jax.Array) -> Selected:
@@ -137,57 +160,61 @@ class ThresholdBSearch(_Base):
     supports_segmented = True
 
     def __init__(self, backend: str = "jnp", interval: int = 5,
-                 eps: float = 1e-3):
+                 eps: float = 1e-3, warm_start: bool = True):
         self.backend = backend
         self.interval = interval
         self.eps = eps
+        self.warm_start = warm_start
 
     def capacity(self, k: int) -> int:
         return 2 * k
+
+    def _warm(self, state: LeafState) -> jax.Array | None:
+        return state.threshold if self.warm_start else None
 
     def compress(self, flat_v: jax.Array, k: int,
                  state: LeafState) -> tuple[Selected, LeafState]:
         if self.backend == "pallas":
             from repro.kernels import ops as kops
-            selected, thr = kops.threshold_binary_search(flat_v, k)
-            return selected, state._replace(threshold=thr)
 
-        def refresh(_):
-            s, thr = sel_lib.threshold_binary_search(flat_v, k, self.eps)
-            return s, thr
+            def refresh(_):
+                s, thr = kops.threshold_binary_search(
+                    flat_v, k, eps=self.eps, warm=self._warm(state))
+                return s, thr
 
-        def reuse(_):
-            s = sel_lib.threshold_filter(flat_v, state.threshold,
-                                         capacity=2 * k)
-            return s, state.threshold
+            def reuse(_):
+                s = kops.threshold_filter(flat_v, state.threshold, 2 * k)
+                return s, state.threshold
+        else:
+            def refresh(_):
+                s, thr = sel_lib.threshold_binary_search(
+                    flat_v, k, self.eps, warm=self._warm(state))
+                return s, thr
+
+            def reuse(_):
+                s = sel_lib.threshold_filter(flat_v, state.threshold,
+                                             capacity=2 * k)
+                return s, state.threshold
 
         do_refresh = (state.interval % self.interval) == 0
         s, thr = jax.lax.cond(do_refresh, refresh, reuse, operand=None)
         return s, state._replace(threshold=thr,
                                  interval=state.interval + 1)
 
-    def compress_segments(self, x2d, geom, states, stats=None):
-        """Alg 3 over one arena; mirrors ``compress`` per backend: the
-        pallas path always re-searches (kernel defaults, interval
-        untouched), the jnp path applies §5.2.2 threshold reuse per
-        segment from the cached LeafState scalars."""
-        import jax.numpy as jnp_
-
+    def segment_spec(self, geom, states):
+        """Alg 3 spec with §5.2.2 threshold reuse per segment from the
+        cached LeafState scalars (both backends — the pallas reuse/warm
+        logic lives in the segmented driver itself)."""
         from repro.kernels import segmented as kseg
-        if self.backend == "pallas":
-            sel, thr = kseg.threshold_bsearch_segments(
-                x2d, geom, use_pallas=True, stats=stats)
-            return sel, [st._replace(threshold=thr[i])
-                         for i, st in enumerate(states)]
-        intervals = jnp_.stack([st.interval for st in states])
-        cached = jnp_.stack([st.threshold for st in states])
-        refresh = (intervals % self.interval) == 0
-        sel, thr = kseg.threshold_bsearch_segments(
-            x2d, geom, eps=self.eps, use_pallas=False, stats=stats,
-            refresh=refresh, cached=cached)
-        return sel, [st._replace(threshold=thr[i],
-                                 interval=st.interval + 1)
-                     for i, st in enumerate(states)]
+        intervals = jnp.stack([st.interval for st in states])
+        cached = jnp.stack([st.threshold for st in states])
+        return kseg.SegmentSpec(alg="bsearch", eps=self.eps,
+                                refresh=(intervals % self.interval) == 0,
+                                cached=cached, warm=self.warm_start)
+
+    def finish_segments(self, states, thr):
+        return [st._replace(threshold=thr[i], interval=st.interval + 1)
+                for i, st in enumerate(states)]
 
     def quant_select(self, flat_v: jax.Array, k: int,
                      phase: jax.Array) -> Selected:
@@ -195,6 +222,85 @@ class ThresholdBSearch(_Base):
         # phase (§5.2.3), so the quantized variant always re-searches.
         return sel_lib.threshold_binary_search_quant(flat_v, k, phase,
                                                      self.eps)
+
+
+class SampledBSearch(ThresholdBSearch):
+    """Alg 3 with DGC-style sampled statistics and sampled nnz counting.
+
+    Mean/max and every per-iteration ``nnz(|x| > t)`` are estimated from
+    a strided ``[::stride]`` subsample (``cost_model.sample_stride``
+    sizes the stride from ``tolerance``), cutting the bisection's
+    count-launch traffic by ~``stride`` x. Because the scaled count
+    ``nnz_sub * stride`` only estimates the true nnz, the message
+    capacity carries tolerance headroom: ``capacity(k) ==
+    2k + ceil(2k * tolerance)`` (``cost_model.sampled_capacity``); the
+    final filter uses the TRUE count, with overflow pinned the same way
+    as the exact selector. ``tolerance == 0`` degenerates to stride 1 ==
+    the exact ``threshold_bsearch`` bitwise.
+    """
+
+    name = "sampled_bsearch"
+
+    def __init__(self, backend: str = "jnp", interval: int = 5,
+                 eps: float = 1e-3, warm_start: bool = True,
+                 tolerance: float = 0.5):
+        super().__init__(backend=backend, interval=interval, eps=eps,
+                         warm_start=warm_start)
+        self.tolerance = tolerance
+
+    def capacity(self, k: int) -> int:
+        return sampled_capacity(k, self.tolerance)
+
+    def compress(self, flat_v: jax.Array, k: int,
+                 state: LeafState) -> tuple[Selected, LeafState]:
+        cap = self.capacity(k)
+        stride = sample_stride(k, self.tolerance)
+        if self.backend == "pallas":
+            # the strided count/stats kernels exist only in segmented
+            # form — view the lone leaf as a one-slot arena (bitwise the
+            # per-leaf 2-D layout) and let the segmented driver handle
+            # reuse/warm/sampling in one place.
+            from repro.core.arena import ARENA_BLOCK, single_slot_geometry
+            from repro.kernels import segmented as kseg
+            from repro.kernels.ops import _to2d
+            x2d, _ = _to2d(flat_v, ARENA_BLOCK)
+            geom = single_slot_geometry(flat_v.size, k)
+            sel, thr = kseg.threshold_bsearch_segments(
+                x2d, geom, eps=self.eps, use_pallas=True,
+                refresh=jnp.reshape((state.interval % self.interval) == 0,
+                                    (1,)),
+                cached=jnp.reshape(state.threshold, (1,)),
+                warm=self.warm_start,
+                strides=(stride,), capacities=(cap,))
+            return sel[0], state._replace(threshold=thr[0],
+                                          interval=state.interval + 1)
+
+        def refresh(_):
+            s, thr = sel_lib.sampled_threshold_search(
+                flat_v, k, stride=stride, capacity=cap, eps=self.eps,
+                warm=self._warm(state))
+            return s, thr
+
+        def reuse(_):
+            s = sel_lib.threshold_filter(flat_v, state.threshold,
+                                         capacity=cap)
+            return s, state.threshold
+
+        do_refresh = (state.interval % self.interval) == 0
+        s, thr = jax.lax.cond(do_refresh, refresh, reuse, operand=None)
+        return s, state._replace(threshold=thr,
+                                 interval=state.interval + 1)
+
+    def segment_spec(self, geom, states):
+        spec = super().segment_spec(geom, states)
+        return spec._replace(
+            strides=tuple(sample_stride(k, self.tolerance)
+                          for k in geom.seg_ks),
+            capacities=tuple(self.capacity(k) for k in geom.seg_ks))
+
+    # no quantized variant: the single-mean payload is incompatible with
+    # the sampled capacity headroom (count header could exceed 2k).
+    quant_select = None
 
 
 class Quantized(_Base):
@@ -212,7 +318,7 @@ class Quantized(_Base):
         if getattr(inner, "quantized", False):
             raise ValueError("cannot quantize an already-quantized "
                              f"compressor {inner.name!r}")
-        if not hasattr(inner, "quant_select"):
+        if not callable(getattr(inner, "quant_select", None)):
             raise ValueError(
                 f"compressor {inner.name!r} has no quantized variant")
         self.inner = inner
@@ -247,13 +353,23 @@ def _trimmed(backend: str = "jnp", trim_eps: float = 0.2,
 
 @registry.register(registry.COMPRESSOR, "threshold_bsearch")
 def _bsearch(backend: str = "jnp", bsearch_interval: int = 5,
-             bsearch_eps: float = 1e-3, **_: Any) -> ThresholdBSearch:
+             bsearch_eps: float = 1e-3, warm_start: bool = True,
+             **_: Any) -> ThresholdBSearch:
     return ThresholdBSearch(backend=backend, interval=bsearch_interval,
-                            eps=bsearch_eps)
+                            eps=bsearch_eps, warm_start=warm_start)
 
 
 registry.register_alias(registry.COMPRESSOR, "threshold_binary_search",
                         "threshold_bsearch")
+
+
+@registry.register(registry.COMPRESSOR, "sampled_bsearch")
+def _sampled(backend: str = "jnp", bsearch_interval: int = 5,
+             bsearch_eps: float = 1e-3, warm_start: bool = True,
+             sampled_tolerance: float = 0.5, **_: Any) -> SampledBSearch:
+    return SampledBSearch(backend=backend, interval=bsearch_interval,
+                          eps=bsearch_eps, warm_start=warm_start,
+                          tolerance=sampled_tolerance)
 
 
 @registry.register(registry.COMPRESSOR, "quantized")

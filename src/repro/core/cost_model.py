@@ -59,6 +59,51 @@ def t_select_model(m: int, throughput: float = SELECT_THROUGHPUT) -> float:
     return m / throughput
 
 
+def sample_stride(k: int, tolerance: float, block: int = 1024) -> int:
+    """Subsampling stride for sampled threshold search (DGC-style).
+
+    The sampled nnz estimate at the true in-band threshold has relative
+    sampling error ~ sqrt(stride / k); keeping that within tolerance/2 of
+    the k..2k band gives ``stride <= k * tolerance^2 / 4``. Rounded down
+    to a power of two so the stride divides the arena block size and the
+    per-leaf / segmented subsample grids coincide, and capped at
+    ``block`` so every kernel row contributes at least one sample.
+    ``tolerance <= 0`` pins the exact path (stride 1).
+    """
+    if tolerance <= 0.0 or k <= 0:
+        return 1
+    target = max(1.0, k * tolerance * tolerance / 4.0)
+    stride = 1 << int(math.floor(math.log2(target)))
+    return max(1, min(block, stride))
+
+
+def sampled_capacity(k: int, tolerance: float) -> int:
+    """Message capacity for sampled bsearch: 2k plus tolerance headroom.
+
+    The sampled search can converge to a threshold whose *true* nnz
+    overshoots the k..2k band by ~the sampling tolerance; the extra
+    ``ceil(2k * tolerance)`` slots absorb that so the overflow flag fires
+    only on genuine estimate blowouts. ``tolerance=0`` gives exactly the
+    exact-path capacity ``2k``.
+    """
+    return 2 * k + int(math.ceil(2 * k * tolerance))
+
+
+def t_select_sampled(m: int, density: float, tolerance: float,
+                     search_iters: int = 10,
+                     throughput: float = SELECT_THROUGHPUT) -> float:
+    """Modeled sampled-selection time for an ``m``-element residual.
+
+    The bisection's ``search_iters`` counting scans touch only the
+    ``m / stride`` subsample; one full scan remains for the final filter
+    that materializes the message. ``tolerance=0`` degenerates to the
+    exact search cost (``search_iters`` full scans + the filter scan).
+    """
+    k = max(1, int(m * density))
+    stride = sample_stride(k, tolerance)
+    return (search_iters * (m / stride) + m) / throughput
+
+
 def eq1_terms(p: int, m: int, density: float, net: NetworkModel,
               t_select: float = 0.0, quantized: bool = False) -> dict:
     """Eq 1 term-by-term: the ONE definition of the sparse-step costs.

@@ -15,12 +15,14 @@ the dense allreduce path regardless of policy.
 
 With ``fuse_leaves`` (default) the sparse path runs over FLAT RESIDUAL
 ARENAS (``repro.core.arena``): leaves sharing a gradient dtype and a
-segmented compressor coalesce into contiguous f32 arenas and the
-select / mask / pack stages each issue ONE fused operation per arena
-instead of one per leaf — O(arenas) dispatches for the Fig 10 overhead
-stages — while selection stays segmented per leaf, so the communicated
-set, params and optimizer state are bitwise identical to the per-leaf
-path. The static per-step plan (paths, dispatch, k targets, arena
+segmented compressor coalesce into contiguous f32 arenas; the mask /
+pack stages each issue ONE fused operation per arena instead of one per
+leaf, and select goes further — ALL arenas of a step search together in
+one ``kernels.segmented.multi_select`` (a single count launch per
+search iteration for every segment of every arena) — O(arenas) -> O(1)
+dispatches for the Fig 10 overhead stages — while selection stays
+segmented per leaf, so the communicated set, params and optimizer state
+are bitwise identical to the per-leaf path. The static per-step plan (paths, dispatch, k targets, arena
 layout) is cached per (treedef, leaf signature, density).
 
 The ORDER of one step's dispatches is owned by a ``Schedule``
@@ -111,9 +113,9 @@ class GradientSync:
     no_quant_paths: tuple[str, ...] = ("lm_head", "embed")
     residual_dtype: Any = jnp.float32
     # Flat residual arenas: coalesce same-dtype sparse leaves that share a
-    # segmented compressor into contiguous f32 arenas, so accumulate /
-    # select / mask / pack each run once per ARENA instead of once per
-    # leaf (O(arenas) fused dispatches; see repro.core.arena). Selection
+    # segmented compressor into contiguous f32 arenas, so mask / pack run
+    # once per ARENA and select once per STEP (all arenas fused into one
+    # multi_select; see repro.core.arena). Selection
     # stays segmented per leaf — the communicated set, params and state
     # are bitwise identical to the per-leaf path. Leaves without a
     # segmented compressor (exact_topk, quantized) and pipelines with
@@ -358,13 +360,12 @@ class GradientSync:
                 return coeffs
         return 0.0, False
 
-    def _update_group(self, group: arena.ArenaGroup, comp: Compressor,
-                      leaves_g: list, leaves_p: list, leaves_s: list,
-                      new_states: list) -> jax.Array:
-        """One fused arena step: accumulate -> gather -> segmented select
-        -> mask -> scatter state back; returns the packed arena message.
-        The select / mask / pack stages each issue ONE fused operation
-        for the whole arena.
+    def _accumulate_group(self, group: arena.ArenaGroup, comp: Compressor,
+                          leaves_g: list, leaves_p: list, leaves_s: list
+                          ) -> tuple:
+        """The accumulate phase of one fused arena step: residual update
+        -> gather into the arena's 2-D view. Returns
+        ``(v2d, u2d, stats, states_in)`` for the fused select phase.
 
         Residual accumulation defaults to the per-leaf hook chain
         (``_accumulate``) — its momentum product is the one piece of
@@ -431,10 +432,56 @@ class GradientSync:
 
             v2d, u2d, stats, states_in = timer.stage("accumulate", _acc)
 
-        timer.count("dispatch_select")
-        selected, slot_states = timer.stage(
-            "select",
-            lambda: comp.compress_segments(v2d, geom, states_in, stats))
+        return v2d, u2d, stats, states_in
+
+    def _select_groups(self, groups, comps, accs) -> list[tuple]:
+        """The fused select phase: Alg 2/3 across EVERY arena of the step
+        in one ``multi_select`` call — a single count/compact dispatch
+        per search iteration for all segments of all arenas (mixed
+        backends partition into one call per backend). Returns one
+        ``(selected, slot_states)`` pair per group.
+
+        Compressors that predate the ``segment_spec`` protocol (custom
+        subclasses overriding only ``compress_segments``) fall back to
+        their own per-group call, preserving behavior at per-arena
+        dispatch granularity.
+        """
+        from repro.kernels import segmented as kseg
+        results: list[tuple | None] = [None] * len(groups)
+        by_backend: dict[bool, list[int]] = {}
+        for i, (group, comp) in enumerate(zip(groups, comps)):
+            v2d, _u2d, stats, states_in = accs[i]
+            try:
+                spec = comp.segment_spec(group.geometry, states_in)
+            except NotImplementedError:
+                sel, slot_states = comp.compress_segments(
+                    v2d, group.geometry, states_in, stats)
+                results[i] = (sel, slot_states)
+                continue
+            by_backend.setdefault(
+                getattr(comp, "backend", "jnp") == "pallas", []).append(
+                    (i, spec))
+        for use_pallas, entries in by_backend.items():
+            parts = [(accs[i][0], groups[i].geometry, spec, accs[i][2])
+                     for i, spec in entries]
+            out = kseg.multi_select(parts, use_pallas=use_pallas)
+            for (i, _spec), (sel, thr) in zip(entries, out):
+                results[i] = (sel, comps[i].finish_segments(accs[i][3], thr))
+        return results
+
+    def _finish_group(self, group: arena.ArenaGroup, comp: Compressor,
+                      selected: list, slot_states: list, v2d: jax.Array,
+                      u2d: jax.Array | None, leaves_p: list,
+                      new_states: list) -> jax.Array:
+        """The post-select phase of one fused arena step: mask -> scatter
+        state back -> pack; returns the packed arena message. The mask /
+        pack stages each issue ONE fused operation for the whole arena.
+        """
+        timer = self.timer
+        m, _ = self._arena_coeffs()
+        mask_u = any(getattr(c, "arena_mask_momentum", False)
+                     for c in self.corrections)
+        need_u = self.uses_momentum_buffer and bool(m or mask_u)
 
         def _mask():
             gidx = arena.communicated_indices(group, selected)
@@ -459,6 +506,18 @@ class GradientSync:
         timer.count("dispatch_pack")
         return timer.stage("pack",
                            lambda: arena.pack_group(group, selected))
+
+    def _count_overflow(self, selections) -> None:
+        """Surface ``threshold_filter`` capacity overflows (§pinned
+        semantics: first-``capacity`` lowest-index survivors kept, count
+        saturated) on the stage timer. Eager-only — under jit the flags
+        are tracers and the counter stays silent (NullTimer is free)."""
+        if not getattr(self.timer, "active", False):
+            return
+        for sel in selections:
+            ovf = getattr(sel, "overflow", None)
+            if ovf is not None and not isinstance(ovf, jax.core.Tracer):
+                self.timer.count("select_overflow", int(bool(ovf)))
 
     def update(self, grads: Any, state: Any, params: Any, lr: jax.Array,
                *, density: float | None = None) -> tuple[Any, Any]:
@@ -508,17 +567,32 @@ class GradientSync:
         barriered wall-clock sample per stage when bench_transport runs
         the pipeline eagerly (the measured Fig 10 decomposition).
         ``dispatch_<stage>`` counters record fused-operation launches:
-        one per arena, one per leaf in the fallback loop. Returns
-        ``(messages, msg_meta)``; mutates ``new_states`` in place.
+        one per leaf in the fallback loop, one per arena for mask/pack —
+        and ONE per step for select: all arenas' segments search
+        together in a single ``multi_select`` (one count launch per
+        iteration for everything). Returns ``(messages, msg_meta)``;
+        mutates ``new_states`` in place.
         """
         timer = self.timer
         messages: list[jax.Array] = []
         msg_meta: list[tuple] = []
 
-        for group, comp in zip(plan.groups, plan.group_comps):
-            messages.append(self._update_group(
-                group, comp, leaves_g, leaves_p, leaves_s, new_states))
-            msg_meta.append(("arena", group, comp))
+        if plan.groups:
+            accs = [self._accumulate_group(group, comp, leaves_g,
+                                           leaves_p, leaves_s)
+                    for group, comp in zip(plan.groups, plan.group_comps)]
+            timer.count("dispatch_select")
+            results = timer.stage(
+                "select", lambda: self._select_groups(
+                    plan.groups, plan.group_comps, accs))
+            self._count_overflow(
+                s for sel, _ in results for s in sel)
+            for (group, comp), (sel, slot_states), acc in zip(
+                    zip(plan.groups, plan.group_comps), results, accs):
+                messages.append(self._finish_group(
+                    group, comp, sel, slot_states, acc[0], acc[1],
+                    leaves_p, new_states))
+                msg_meta.append(("arena", group, comp))
 
         for i, comp, k in plan.sparse:
             timer.count("dispatch_accumulate")
@@ -528,6 +602,7 @@ class GradientSync:
             timer.count("dispatch_select")
             selected, st = timer.stage(
                 "select", lambda f=flat_v, st=st: comp.compress(f, k, st))
+            self._count_overflow([selected])
 
             def _mask(st=st, sel=selected):
                 st2 = mask_communicated(st, sel.indices, momentum=False)

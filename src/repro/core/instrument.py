@@ -98,7 +98,9 @@ class WallClockTimer:
         return out
 
     def count(self, name: str, n: int = 1) -> None:
-        self.counts[name] += n
+        # coerce: callers may pass numpy/DeviceArray bools (e.g. the
+        # select_overflow flag) — keep the counter a python int
+        self.counts[name] += int(n)
 
     def set_lane(self, lane: str | None) -> None:
         self._lane = lane

@@ -83,6 +83,9 @@ def gradient_sync_from_rgc_config(cfg: RGCConfig) -> GradientSync:
         trimmed_threshold_bytes=cfg.trimmed_threshold_bytes,
         backend=cfg.backend,
         bsearch_interval=cfg.bsearch_interval,
+        # the legacy monolith cold-searched on every refresh; keep its
+        # bitwise parity contract by disabling the warm-started bracket
+        warm_start=False,
     )
 
 

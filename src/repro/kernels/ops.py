@@ -23,8 +23,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.selection import (Selected, bisect_midpoint,
-                                  mean_of_sum, threshold_at)
+from repro.core.selection import (Selected, ladder_ratio, mean_of_sum,
+                                  search_band, threshold_at)
 
 from .block_stats import abs_sum_max
 from .compact import compact_gt
@@ -48,11 +48,17 @@ def _to2d(x: jax.Array, block: int) -> tuple[jax.Array, int]:
     return xp.reshape(nb, block), n
 
 
-def _bucket_cap(k: int, nb: int, block: int) -> int:
-    """Per-block bucket size: 4x the uniform share of 2k survivors, rounded
-    to the 8-sublane granule, clamped to the block."""
-    per = -(-2 * k // nb)
+def _cap_for(capacity: int, nb: int, block: int) -> int:
+    """Per-block bucket size for gathering ``capacity`` survivors: 4x the
+    uniform per-block share, rounded to the 8-sublane granule, clamped to
+    the block."""
+    per = -(-capacity // nb)
     return min(block, max(8, ((4 * per + 7) // 8) * 8))
+
+
+def _bucket_cap(k: int, nb: int, block: int) -> int:
+    """Bucket size for the k-of-2k selectors (trimmed / exact bsearch)."""
+    return _cap_for(2 * k, nb, block)
 
 
 def stats(x: jax.Array, *, block: int = DEFAULT_BLOCK,
@@ -98,19 +104,20 @@ def trimmed_topk(x: jax.Array, k: int, *, eps: float = 0.2,
     mean = mean_of_sum(s, n)
 
     def cond(state):
-        ratio, nnz = state
-        return jnp.logical_and(nnz < k, ratio > 0.0)
+        step, nnz = state
+        return jnp.logical_and(nnz < k, ladder_ratio(step, eps) > 0.0)
 
     def body(state):
-        ratio, _ = state
-        ratio = ratio - eps
-        thr = threshold_at(mean, mx, ratio)
-        return ratio, count_gt(x2d, thr, interpret=interpret)
+        step, _ = state
+        step = step + 1
+        thr = threshold_at(mean, mx, ladder_ratio(step, eps))
+        return step, count_gt(x2d, thr, interpret=interpret)
 
-    r0 = jnp.float32(1.0 - eps)
-    nnz0 = count_gt(x2d, threshold_at(mean, mx, r0), interpret=interpret)
-    ratio, _ = jax.lax.while_loop(cond, body, (r0, nnz0))
-    thr = threshold_at(mean, mx, ratio)
+    step0 = jnp.int32(1)
+    nnz0 = count_gt(x2d, threshold_at(mean, mx, ladder_ratio(step0, eps)),
+                    interpret=interpret)
+    step, _ = jax.lax.while_loop(cond, body, (step0, nnz0))
+    thr = threshold_at(mean, mx, ladder_ratio(step, eps))
 
     cap = _bucket_cap(k, nb, block)
     vals, idx, counts = compact_gt(x2d, thr, cap, n, interpret=interpret)
@@ -135,54 +142,66 @@ def trimmed_topk(x: jax.Array, k: int, *, eps: float = 0.2,
 
 
 def threshold_binary_search(x: jax.Array, k: int, *, eps: float = 1e-3,
+                            warm: jax.Array | None = None,
                             block: int = DEFAULT_BLOCK,
                             interpret: bool | None = None
                             ) -> tuple[Selected, jax.Array]:
-    """Algorithm 3 on the TPU kernels. capacity == 2k; returns threshold."""
+    """Algorithm 3 on the TPU kernels. capacity == 2k; returns threshold.
+
+    ``warm`` seeds the bisection bracket from the previous converged
+    threshold (``selection.search_band``); ``None`` is the cold search.
+    """
     interpret = resolve_interpret(interpret)
     x2d, n = _to2d(x, block)
-    nb = x2d.shape[0]
     s, mx = abs_sum_max(x2d, interpret=interpret)
     mean = mean_of_sum(s, n)
+    thr = search_band(lambda t: count_gt(x2d, t, interpret=interpret),
+                      mean, mx, k, eps, warm)
+    return _filter_2d(x, x2d, n, thr, 2 * k, block,
+                      interpret=interpret), thr
 
-    def cond(state):
-        l, r, nnz = state
-        done = jnp.logical_and(nnz >= k, nnz <= 2 * k)
-        return jnp.logical_and(~done, (r - l) > eps)
 
-    def body(state):
-        l, r, _ = state
-        ratio = bisect_midpoint(l, r)
-        thr = threshold_at(mean, mx, ratio)
-        nnz = count_gt(x2d, thr, interpret=interpret)
-        r = jnp.where(nnz < k, ratio, r)
-        l = jnp.where(nnz > 2 * k, ratio, l)
-        return l, r, nnz
+def threshold_filter(x: jax.Array, threshold: jax.Array, capacity: int, *,
+                     block: int = DEFAULT_BLOCK,
+                     interpret: bool | None = None) -> Selected:
+    """First-``capacity`` |x| > threshold filter on the TPU kernels.
 
-    l, r, _ = jax.lax.while_loop(
-        cond, body, (jnp.float32(0.0), jnp.float32(1.0), jnp.int32(-1)))
-    thr = threshold_at(mean, mx, bisect_midpoint(l, r))
+    Kernel twin of ``selection.threshold_filter`` (same overflow
+    semantics, same count header) — the reuse branch of the bsearch
+    compressor on the pallas backend, so threshold *reuse* steps skip the
+    search kernels entirely instead of re-searching.
+    """
+    interpret = resolve_interpret(interpret)
+    x2d, n = _to2d(x, block)
+    return _filter_2d(x, x2d, n, threshold, capacity, block,
+                      interpret=interpret)
 
+
+def _filter_2d(x: jax.Array, x2d: jax.Array, n: int, thr: jax.Array,
+               capacity: int, block: int, *, interpret: bool) -> Selected:
+    """count -> compact -> first-``capacity`` gather, with the jnp filter
+    as the bucket-overflow fallback."""
+    nb = x2d.shape[0]
     nnz = count_gt(x2d, thr, interpret=interpret)
-    cap = _bucket_cap(k, nb, block)
+    cap = _cap_for(capacity, nb, block)
     vals, idx, counts = compact_gt(x2d, thr, cap, n, interpret=interpret)
-    si, sv = _gather_topk_from_buckets(vals, idx, 2 * k, n,
+    si, sv = _gather_topk_from_buckets(vals, idx, capacity, n,
                                        order_by_magnitude=False)
     # same overflow guard as trimmed_topk (search may exit on r-l <= eps
-    # with nnz >> 2k); fall back to the jnp filter for exactness
+    # with nnz >> capacity); fall back to the jnp filter for exactness
     overflow = jnp.any(counts > cap)
 
     def from_buckets(_):
         return si, sv
 
     def exact(_):
-        from repro.core.selection import threshold_filter
-        s = threshold_filter(x.reshape(-1).astype(jnp.float32), thr,
-                             capacity=2 * k)
+        from repro.core.selection import threshold_filter as jnp_filter
+        s = jnp_filter(x.reshape(-1).astype(jnp.float32), thr,
+                       capacity=capacity)
         return s.indices, s.values
 
     si, sv = jax.lax.cond(overflow, exact, from_buckets, operand=None)
-    return Selected(si, sv, jnp.minimum(nnz, 2 * k)), thr
+    return Selected(si, sv, jnp.minimum(nnz, capacity), nnz > capacity)
 
 
 def residual_update(grad: jax.Array, u: jax.Array, v: jax.Array, *,

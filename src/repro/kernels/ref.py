@@ -79,7 +79,8 @@ def _seg_rows(block_seg) -> list[tuple[int, int]]:
 
 
 def seg_abs_sum_max(x2d: jax.Array, block_seg, block_size,
-                    n_seg: int) -> tuple[jax.Array, jax.Array]:
+                    n_seg: int, stride_seg=None
+                    ) -> tuple[jax.Array, jax.Array]:
     """Per-segment (sum|x|, max|x|) over the arena's [nb, block] rows.
 
     Each segment's sum runs ``selection.pinned_sum`` over the slot's
@@ -87,25 +88,46 @@ def seg_abs_sum_max(x2d: jax.Array, block_seg, block_size,
     summation tree ``selection._stats`` runs for that leaf on its own,
     so the per-segment mean is bitwise the per-leaf mean in any graph
     context. ``block_size`` carries the owning slot's true size per row.
+
+    ``stride_seg`` (per-segment ints) restricts the statistics to the
+    slot's ``[::stride]`` subsample — the same vector the sampled
+    per-leaf selector slices, so sampled per-leaf and sampled segmented
+    statistics stay bitwise too. ``None`` / stride 1 is the exact path.
     """
     from repro.core.selection import pinned_sum
     ax = jnp.abs(x2d.astype(jnp.float32))
     bsize = np.asarray(block_size)
     sums, maxs = [], []
-    for r0, r1 in _seg_rows(block_seg):
+    for s, (r0, r1) in enumerate(_seg_rows(block_seg)):
         seg = ax[r0:r1]
-        sums.append(pinned_sum(seg.reshape(-1)[:int(bsize[r0])]))
-        maxs.append(jnp.max(seg))
+        stride = 1 if stride_seg is None else int(stride_seg[s])
+        if stride > 1:
+            vec = seg.reshape(-1)[:int(bsize[r0]):stride]
+            sums.append(pinned_sum(vec))
+            maxs.append(jnp.max(vec))
+        else:
+            sums.append(pinned_sum(seg.reshape(-1)[:int(bsize[r0])]))
+            maxs.append(jnp.max(seg))
     return jnp.stack(sums), jnp.stack(maxs)
 
 
 def seg_count_gt(x2d: jax.Array, block_seg, thresholds: jax.Array,
-                 n_seg: int) -> jax.Array:
-    """Per-segment nnz(|x| > thresholds[seg]) (integer — order-free)."""
+                 n_seg: int, stride_b=None) -> jax.Array:
+    """Per-segment nnz(|x| > thresholds[seg]) (integer — order-free).
+
+    ``stride_b`` (per-row ints) counts only columns on the row's stride
+    grid — the sampled paths' subsample count. Strides divide the block
+    and slots are block-aligned, so ``col % stride == 0`` is exactly the
+    slot-local ``[::stride]`` grid the per-leaf sampled count scans.
+    """
     seg = jnp.asarray(np.asarray(block_seg), jnp.int32)
     thr_b = jnp.asarray(thresholds, jnp.float32)[seg]
-    cnt_b = jnp.sum(jnp.abs(x2d.astype(jnp.float32)) > thr_b[:, None],
-                    axis=1).astype(jnp.int32)
+    mask = jnp.abs(x2d.astype(jnp.float32)) > thr_b[:, None]
+    if stride_b is not None:
+        col = jnp.arange(x2d.shape[1], dtype=jnp.int32)[None, :]
+        sb = jnp.asarray(np.asarray(stride_b), jnp.int32)[:, None]
+        mask = mask & (col % sb == 0)
+    cnt_b = jnp.sum(mask, axis=1).astype(jnp.int32)
     return jax.ops.segment_sum(cnt_b, seg, num_segments=n_seg)
 
 

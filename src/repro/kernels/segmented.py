@@ -38,23 +38,23 @@ the same math the per-leaf jnp selectors in ``core.selection`` run.
 from __future__ import annotations
 
 import functools
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.selection import (Selected, bisect_midpoint,
-                                  mean_of_sum, threshold_at,
-                                  threshold_filter)
+from repro.core.selection import (Selected, bisect_midpoint, ladder_ratio,
+                                  threshold_at, threshold_filter, warm_ratio)
 
 from . import ref
-from .ops import _bucket_cap, _gather_topk_from_buckets, resolve_interpret
+from .ops import _cap_for, _gather_topk_from_buckets, resolve_interpret
 
 __all__ = [
     "seg_abs_sum_max", "seg_count_gt", "seg_compact_gt",
     "seg_residual_update_stats", "seg_stats", "seg_mean",
-    "seg_counts",
+    "seg_counts", "SegmentSpec", "multi_select",
     "trimmed_topk_segments", "threshold_bsearch_segments",
 ]
 
@@ -88,29 +88,63 @@ def _stats_kernel(seg_ref, x_ref, sum_ref, max_ref, *, n_seg: int):
                                jnp.where(hit, jnp.max(ax), 0.0))
 
 
+def _stats_kernel_strided(seg_ref, stride_ref, x_ref, sum_ref, max_ref, *,
+                          n_seg: int, block: int):
+    """Strided-subsample stats: only columns on the row's stride grid
+    contribute (strides divide the block, so the masked columns are the
+    slot-local ``[::stride]`` subsample the sampled selector defines)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros(sum_ref.shape, sum_ref.dtype)
+        max_ref[...] = jnp.zeros(max_ref.shape, max_ref.dtype)
+
+    ax = jnp.abs(x_ref[...].astype(jnp.float32))
+    inc = (jax.lax.broadcasted_iota(jnp.int32, ax.shape, 1)
+           % stride_ref[0, 0]) == 0
+    axm = jnp.where(inc, ax, 0.0)
+    hit = _lane(n_seg) == seg_ref[0, 0]
+    sum_ref[...] += jnp.where(hit, jnp.sum(axm), 0.0)
+    max_ref[...] = jnp.maximum(max_ref[...],
+                               jnp.where(hit, jnp.max(axm), 0.0))
+
+
 def seg_abs_sum_max(x2d: jax.Array, block_seg: np.ndarray, n_seg: int, *,
+                    stride_b: np.ndarray | None = None,
                     interpret: bool | None = None
                     ) -> tuple[jax.Array, jax.Array]:
-    """Per-segment (sum|x|, max|x|) over [nb, block] arena rows."""
+    """Per-segment (sum|x|, max|x|) over [nb, block] arena rows.
+
+    ``stride_b`` (per-row ints) restricts the statistics to each row's
+    stride grid for the sampled selector; ``None`` keeps the exact-path
+    kernel (and its graph) untouched.
+    """
     nb, block = x2d.shape
     seg = jnp.asarray(block_seg, jnp.int32).reshape(nb, 1)
+    row1 = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    acc = pl.BlockSpec((1, n_seg), lambda i: (0, 0))
+    if stride_b is None:
+        kern = functools.partial(_stats_kernel, n_seg=n_seg)
+        ins = (seg, x2d)
+        in_specs = [row1, pl.BlockSpec((1, block), lambda i: (i, 0))]
+    else:
+        kern = functools.partial(_stats_kernel_strided, n_seg=n_seg,
+                                 block=block)
+        stride = jnp.asarray(np.asarray(stride_b), jnp.int32).reshape(nb, 1)
+        ins = (seg, stride, x2d)
+        in_specs = [row1, row1, pl.BlockSpec((1, block), lambda i: (i, 0))]
     s, m = pl.pallas_call(
-        functools.partial(_stats_kernel, n_seg=n_seg),
+        kern,
         grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, block), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
-            pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
+        out_specs=[acc, acc],
         out_shape=[
             jax.ShapeDtypeStruct((1, n_seg), jnp.float32),
             jax.ShapeDtypeStruct((1, n_seg), jnp.float32),
         ],
         interpret=resolve_interpret(interpret),
-    )(seg, x2d)
+    )(*ins)
     return s[0], m[0]
 
 
@@ -128,26 +162,57 @@ def _count_kernel(seg_ref, thr_ref, x_ref, out_ref, *, n_seg: int):
     out_ref[...] += jnp.where(_lane(n_seg) == seg, c, 0)
 
 
+def _count_kernel_strided(seg_ref, stride_ref, thr_ref, x_ref, out_ref, *,
+                          n_seg: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    seg = seg_ref[0, 0]
+    thr = _pick(thr_ref, seg, n_seg)
+    ax = jnp.abs(x_ref[...].astype(jnp.float32))
+    inc = (jax.lax.broadcasted_iota(jnp.int32, ax.shape, 1)
+           % stride_ref[0, 0]) == 0
+    c = jnp.sum(((ax > thr) & inc).astype(jnp.int32))
+    out_ref[...] += jnp.where(_lane(n_seg) == seg, c, 0)
+
+
 def seg_count_gt(x2d: jax.Array, block_seg: np.ndarray,
-                 thresholds: jax.Array, *, interpret: bool | None = None
+                 thresholds: jax.Array, *,
+                 stride_b: np.ndarray | None = None,
+                 interpret: bool | None = None
                  ) -> jax.Array:
     """Per-segment nnz(|x| > thresholds[seg]) — one launch per search
-    step for the whole arena (the per-leaf path launches one per leaf)."""
+    step for the whole arena (the per-leaf path launches one per leaf).
+
+    ``stride_b`` counts only each row's stride-grid columns (the sampled
+    selector's subsample count — integer, so stride-1 rows are exact)."""
     nb, block = x2d.shape
     n_seg = thresholds.shape[0]
     seg = jnp.asarray(block_seg, jnp.int32).reshape(nb, 1)
+    thr2d = thresholds.astype(jnp.float32).reshape(1, n_seg)
+    row1 = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    vec = pl.BlockSpec((1, n_seg), lambda i: (0, 0))
+    rowb = pl.BlockSpec((1, block), lambda i: (i, 0))
+    if stride_b is None:
+        kern = functools.partial(_count_kernel, n_seg=n_seg)
+        ins = (seg, thr2d, x2d)
+        in_specs = [row1, vec, rowb]
+    else:
+        kern = functools.partial(_count_kernel_strided, n_seg=n_seg)
+        stride = jnp.asarray(np.asarray(stride_b), jnp.int32).reshape(nb, 1)
+        ins = (seg, stride, thr2d, x2d)
+        in_specs = [row1, row1, vec, rowb]
     out = pl.pallas_call(
-        functools.partial(_count_kernel, n_seg=n_seg),
+        kern,
         grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
-            pl.BlockSpec((1, block), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, n_seg), lambda i: (0, 0)),
+        in_specs=in_specs,
+        out_specs=vec,
         out_shape=jax.ShapeDtypeStruct((1, n_seg), jnp.int32),
         interpret=resolve_interpret(interpret),
-    )(seg, thresholds.astype(jnp.float32).reshape(1, n_seg), x2d)
+    )(*ins)
     return out[0]
 
 
@@ -327,37 +392,53 @@ def seg_residual_update_stats(
 # Segmented selectors (Algorithm 2/3 across all slots at once)
 # ---------------------------------------------------------------------------
 
-def seg_mean(sums: jax.Array, geom) -> jax.Array:
+def seg_mean(sums: jax.Array, geom, stride_seg=None) -> jax.Array:
     """Per-segment mean from per-segment sums — the pinned reciprocal
     multiply of ``selection.mean_of_sum``, vectorized over slots. The
     ONE definition both ``seg_stats`` and the fused accumulate+stats
-    path use, so their statistics can never diverge."""
+    path use, so their statistics can never diverge. ``stride_seg``
+    divides by each slot's SAMPLED element count instead (the sampled
+    selector's subsample mean)."""
     from repro.core.residual import pinned_product
-    recip = jnp.asarray([jnp.float32(1.0 / n) for n in geom.seg_sizes])
+    if stride_seg is None:
+        ns = geom.seg_sizes
+    else:
+        ns = [-(-n // int(s)) for n, s in zip(geom.seg_sizes, stride_seg)]
+    recip = jnp.asarray([jnp.float32(1.0 / n) for n in ns])
     return pinned_product(sums, recip)
 
 
 def seg_stats(x2d: jax.Array, geom, *, use_pallas: bool,
-              interpret: bool | None = None
+              interpret: bool | None = None, stride_seg=None
               ) -> tuple[jax.Array, jax.Array]:
     """Per-segment (mean|x|, max|x|). The jnp twin reduces each slot's
     own [nblocks, block] rows with the shapes ``selection._stats`` uses,
-    so per-leaf statistics are reproduced bitwise on either backend."""
+    so per-leaf statistics are reproduced bitwise on either backend.
+    ``stride_seg`` computes subsample statistics for the sampled paths
+    (``None`` / all-ones keeps the exact kernels untouched)."""
+    strided = stride_seg is not None and any(int(s) > 1 for s in stride_seg)
+    if not strided:
+        stride_seg = None
     if use_pallas:
+        stride_b = None if stride_seg is None else \
+            np.asarray(stride_seg, np.int32)[np.asarray(geom.block_seg)]
         sums, maxs = seg_abs_sum_max(x2d, geom.block_seg, geom.n_seg,
-                                     interpret=interpret)
+                                     stride_b=stride_b, interpret=interpret)
     else:
         sums, maxs = ref.seg_abs_sum_max(x2d, geom.block_seg,
-                                         geom.block_size, geom.n_seg)
-    return seg_mean(sums, geom), maxs
+                                         geom.block_size, geom.n_seg,
+                                         stride_seg)
+    return seg_mean(sums, geom, stride_seg), maxs
 
 
 def seg_counts(x2d: jax.Array, geom, thresholds: jax.Array, *,
-               use_pallas: bool, interpret: bool | None = None) -> jax.Array:
+               use_pallas: bool, interpret: bool | None = None,
+               stride_b=None) -> jax.Array:
     if use_pallas:
         return seg_count_gt(x2d, geom.block_seg, thresholds,
-                            interpret=interpret)
-    return ref.seg_count_gt(x2d, geom.block_seg, thresholds, geom.n_seg)
+                            stride_b=stride_b, interpret=interpret)
+    return ref.seg_count_gt(x2d, geom.block_seg, thresholds, geom.n_seg,
+                            stride_b)
 
 
 def _seg_buckets(x2d, geom, thresholds, cap, *, use_pallas, interpret):
@@ -369,16 +450,271 @@ def _seg_buckets(x2d, geom, thresholds, cap, *, use_pallas, interpret):
                               geom.block_size, thresholds, cap)
 
 
-def _caps(geom, block: int) -> tuple[list[int], int]:
-    caps = [_bucket_cap(k, r1 - r0, block)
-            for k, (r0, r1) in zip(geom.seg_ks, geom.seg_rows)]
-    return caps, max(caps)
-
-
 def _slot_flat(x2d: jax.Array, geom, s: int) -> jax.Array:
     """Slot ``s`` as the flat f32[size] vector the per-leaf path sees."""
     r0, r1 = geom.seg_rows[s]
     return x2d[r0:r1].reshape(-1)[:geom.seg_sizes[s]]
+
+
+class SegmentSpec(NamedTuple):
+    """One arena's selection request for ``multi_select``.
+
+    ``alg`` picks the search (Alg 2 ratio ladder vs Alg 3 bisection);
+    the runtime fields drive §5.2.2 threshold reuse (``refresh`` /
+    ``cached``), warm-started bisection (``warm``) and DGC-style sampled
+    counting (``strides`` — per-slot subsample strides; all-1 is exact).
+    ``capacities`` are per-slot message capacities (defaulting to ``k``
+    for trimmed and ``2k`` for bsearch when empty).
+    """
+    alg: str                              # "trimmed" | "bsearch"
+    eps: float
+    capacities: tuple[int, ...] = ()
+    strides: tuple[int, ...] = ()
+    refresh: jax.Array | None = None      # bool[n_seg]
+    cached: jax.Array | None = None       # f32[n_seg]
+    warm: bool = False
+
+
+def _norm_caps(spec: SegmentSpec, geom) -> tuple[int, ...]:
+    if spec.capacities:
+        return tuple(spec.capacities)
+    if spec.alg == "trimmed":
+        return tuple(geom.seg_ks)
+    return tuple(2 * k for k in geom.seg_ks)
+
+
+def _norm_strides(spec: SegmentSpec, geom) -> tuple[int, ...]:
+    if spec.strides and spec.alg == "bsearch":
+        return tuple(int(s) for s in spec.strides)
+    return (1,) * geom.n_seg
+
+
+def multi_select(
+    parts: list[tuple[jax.Array, Any, SegmentSpec,
+                      tuple[jax.Array, jax.Array] | None]],
+    *,
+    use_pallas: bool,
+    interpret: bool | None = None,
+) -> list[tuple[list[Selected], jax.Array]]:
+    """Algorithm 2 AND 3 across every slot of every arena in ONE dispatch
+    per search iteration.
+
+    ``parts`` is ``[(x2d, geometry, SegmentSpec, stats-or-None), ...]``
+    — one entry per arena. The arenas are row-stacked into a virtual
+    super-arena (``arena.stack_geometries``) and both threshold walks run
+    in a single unified ``while_loop``: trimmed segments step their
+    pinned ratio ladder, bsearch segments bisect their bracket, and every
+    iteration issues ONE ``seg_count_gt`` launch for all segments of all
+    arenas. Converged (or reuse / warm-accepted) segments are FROZEN —
+    their carried state stops updating — so each segment still walks
+    exactly the iterate sequence its per-leaf selector would, and the
+    selected sets stay bitwise identical to the per-leaf path. Bucket
+    compaction is likewise one ``seg_compact_gt`` launch for everything.
+
+    Returns one ``(selections, thresholds)`` pair per part, in order.
+    """
+    geoms = [p[1] for p in parts]
+    specs = [p[2] for p in parts]
+    if len(parts) == 1:
+        x_all, geom_all = parts[0][0], geoms[0]
+    else:
+        from repro.core.arena import stack_geometries
+        x_all = jnp.concatenate([p[0] for p in parts], axis=0)
+        geom_all = stack_geometries(geoms)
+
+    n = geom_all.n_seg
+    k_vec = jnp.asarray(geom_all.seg_ks, jnp.int32)
+    two_k = 2 * k_vec
+
+    # --- static per-segment vectors -------------------------------------
+    trim_np = np.concatenate([
+        np.full(g.n_seg, s.alg == "trimmed") for g, s in zip(geoms, specs)])
+    eps_np = np.concatenate([
+        np.full(g.n_seg, s.eps, np.float32) for g, s in zip(geoms, specs)])
+    warm_np = np.concatenate([
+        np.full(g.n_seg, bool(s.warm) and s.alg == "bsearch")
+        for g, s in zip(geoms, specs)])
+    strides = sum((_norm_strides(s, g) for g, s in zip(geoms, specs)), ())
+    caps_sel = sum((_norm_caps(s, g) for g, s in zip(geoms, specs)), ())
+    is_trim = jnp.asarray(trim_np)
+    eps_vec = jnp.asarray(eps_np)
+    warm_vec = jnp.asarray(warm_np)
+    any_trim = bool(trim_np.any())
+    any_warm = bool(warm_np.any())
+    sampled = any(s > 1 for s in strides)
+    stride_b = np.asarray(strides, np.int64)[
+        np.asarray(geom_all.block_seg)].astype(np.int32) if sampled else None
+    stride_vec = jnp.asarray(strides, jnp.int32)
+
+    # --- runtime per-segment vectors ------------------------------------
+    refresh = jnp.concatenate([
+        jnp.asarray(s.refresh) if s.refresh is not None
+        else jnp.ones((g.n_seg,), bool) for g, s in zip(geoms, specs)])
+    have_cached = any(s.cached is not None for s in specs)
+    cached = jnp.concatenate([
+        jnp.asarray(s.cached, jnp.float32) if s.cached is not None
+        else jnp.zeros((g.n_seg,), jnp.float32)
+        for g, s in zip(geoms, specs)])
+
+    # --- statistics (per-segment — independent of arena grouping) -------
+    if all(p[3] is None for p in parts):
+        mean, mx = seg_stats(x_all, geom_all, use_pallas=use_pallas,
+                             interpret=interpret,
+                             stride_seg=strides if sampled else None)
+    else:
+        means, maxs = [], []
+        for (x2d, geom, spec, stats) in parts:
+            if stats is None:
+                st = _norm_strides(spec, geom)
+                stats = seg_stats(
+                    x2d, geom, use_pallas=use_pallas, interpret=interpret,
+                    stride_seg=st if any(s > 1 for s in st) else None)
+            means.append(stats[0])
+            maxs.append(stats[1])
+        mean, mx = jnp.concatenate(means), jnp.concatenate(maxs)
+
+    def count_est(thr):
+        """One launch: per-segment survivor counts; sampled segments
+        count their subsample and scale by the stride (integer — exact
+        segments are untouched by the scaling)."""
+        cnt = seg_counts(x_all, geom_all, thr, use_pallas=use_pallas,
+                         interpret=interpret, stride_b=stride_b)
+        return cnt * stride_vec if sampled else cnt
+
+    def in_band(nz):
+        return (nz >= k_vec) & (nz <= two_k)
+
+    # --- initial probe: trimmed rung 1 + warm cached thresholds ---------
+    step0 = jnp.ones((n,), jnp.int32)
+    if any_trim or any_warm:
+        thr0 = jnp.where(is_trim,
+                         threshold_at(mean, mx, ladder_ratio(step0, eps_vec)),
+                         cached)
+        cnt0 = count_est(thr0)
+        accept = warm_vec & refresh & ~is_trim & in_band(cnt0)
+        use0 = is_trim | warm_vec
+        nnz0 = jnp.where(use0, cnt0, jnp.int32(-1))
+        r_prev = warm_ratio(cached, mean, mx)
+        seed = warm_vec & ~is_trim
+        l0 = jnp.where(seed & (cnt0 > two_k), r_prev,
+                       jnp.zeros((n,), jnp.float32))
+        r0 = jnp.where(seed & (cnt0 < k_vec), r_prev,
+                       jnp.ones((n,), jnp.float32))
+    else:
+        accept = jnp.zeros((n,), bool)
+        nnz0 = jnp.full((n,), -1, jnp.int32)
+        l0 = jnp.zeros((n,), jnp.float32)
+        r0 = jnp.ones((n,), jnp.float32)
+
+    # --- unified search loop: one count launch per iteration ------------
+    def trim_active(step, nnz):
+        return is_trim & (nnz < k_vec) & (ladder_ratio(step, eps_vec) > 0.0)
+
+    def bs_active(l, r, nnz):
+        return (~is_trim & refresh & ~accept & ~in_band(nnz)
+                & ((r - l) > eps_vec))
+
+    def cond(state):
+        step, l, r, nnz = state
+        return jnp.any(trim_active(step, nnz) | bs_active(l, r, nnz))
+
+    def body(state):
+        step, l, r, nnz = state
+        ta = trim_active(step, nnz)
+        ba = bs_active(l, r, nnz)
+        step = jnp.where(ta, step + 1, step)
+        ratio_b = bisect_midpoint(l, r)
+        ratio = jnp.where(is_trim, ladder_ratio(step, eps_vec), ratio_b)
+        cnt = count_est(threshold_at(mean, mx, ratio))
+        nnz = jnp.where(ta | ba, cnt, nnz)
+        r = jnp.where(ba & (cnt < k_vec), ratio_b, r)
+        l = jnp.where(ba & (cnt > two_k), ratio_b, l)
+        return step, l, r, nnz
+
+    step, l, r, nnz_loop = jax.lax.while_loop(
+        cond, body, (step0, l0, r0, nnz0))
+
+    ratio_fin = jnp.where(is_trim, ladder_ratio(step, eps_vec),
+                          bisect_midpoint(l, r))
+    thr = threshold_at(mean, mx, ratio_fin)
+    if any_warm:
+        thr = jnp.where(accept, cached, thr)
+    if have_cached:
+        thr = jnp.where(is_trim | refresh, thr, cached)
+
+    # --- one full count + one compaction for every arena ----------------
+    nnz_full = seg_counts(x_all, geom_all, thr, use_pallas=use_pallas,
+                          interpret=interpret)
+    caps = [_cap_for(2 * k if t else max(2 * k, c), r1 - r0, geom_all.block)
+            for t, k, c, (r0, r1) in zip(
+                trim_np, geom_all.seg_ks, caps_sel, geom_all.seg_rows)]
+    cap_max = max(caps)
+    vals, idx, cnts = _seg_buckets(x_all, geom_all, thr, cap_max,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)
+
+    # --- per-slot gathers (plain jnp on the short buckets) --------------
+    results: list[tuple[list[Selected], jax.Array]] = []
+    seg0 = 0
+    for (x2d, geom, spec, _stats) in parts:
+        out: list[Selected] = []
+        for sl, ((prow0, prow1), k, size) in enumerate(
+                zip(geom.seg_rows, geom.seg_ks, geom.seg_sizes)):
+            s = seg0 + sl
+            row0, row1 = geom_all.seg_rows[s]
+            cap = caps[s]
+            cap_sel = caps_sel[s]
+            if spec.alg == "trimmed":
+                si, sv = _gather_topk_from_buckets(
+                    vals[row0:row1, :cap], idx[row0:row1, :cap], k, size,
+                    order_by_magnitude=True)
+                overflow = jnp.any(cnts[row0:row1] > cap)
+                if use_pallas:
+                    # mirror ops.trimmed_topk: exact fallback on overflow
+                    fallback = overflow
+
+                    def exact(_, sl=sl, k=k, x2d=x2d, geom=geom):
+                        from repro.core.selection import exact_topk
+                        e = exact_topk(_slot_flat(x2d, geom, sl), k)
+                        return e.indices, e.values
+                else:
+                    # mirror selection.trimmed_topk (no buckets at all):
+                    # the full top-k pads with real zero-score indices
+                    # when nnz < k
+                    fallback = overflow | (nnz_loop[s] < k)
+
+                    def exact(_, sl=sl, k=k, t=thr[s], x2d=x2d, geom=geom):
+                        from repro.core.selection import _pad_topk
+                        flat = _slot_flat(x2d, geom, sl)
+                        score = jnp.where(jnp.abs(flat) > t,
+                                          jnp.abs(flat), 0.0)
+                        e = _pad_topk(flat, score, k)
+                        return e.indices, e.values
+
+                si, sv = jax.lax.cond(fallback, exact,
+                                      lambda _, si=si, sv=sv: (si, sv),
+                                      operand=None)
+                out.append(Selected(si, sv, jnp.int32(k)))
+            else:
+                si, sv = _gather_topk_from_buckets(
+                    vals[row0:row1, :cap], idx[row0:row1, :cap], cap_sel,
+                    size, order_by_magnitude=False)
+                overflow = jnp.any(cnts[row0:row1] > cap)
+
+                def exact(_, sl=sl, c=cap_sel, t=thr[s], x2d=x2d, geom=geom):
+                    e = threshold_filter(_slot_flat(x2d, geom, sl), t,
+                                         capacity=c)
+                    return e.indices, e.values
+
+                si, sv = jax.lax.cond(overflow, exact,
+                                      lambda _, si=si, sv=sv: (si, sv),
+                                      operand=None)
+                out.append(Selected(si, sv,
+                                    jnp.minimum(nnz_full[s], cap_sel),
+                                    nnz_full[s] > cap_sel))
+        results.append((out, thr[seg0:seg0 + geom.n_seg]))
+        seg0 += geom.n_seg
+    return results
 
 
 def trimmed_topk_segments(
@@ -392,72 +728,14 @@ def trimmed_topk_segments(
 ) -> list[Selected]:
     """Algorithm 2 over every slot of one arena (capacity == k_i each).
 
-    The ratio walk runs vectorized with converged segments frozen, so
-    each slot's final threshold is bitwise the per-leaf loop's. Per-slot
-    bucket gathers fall back to the exact selector exactly when the
-    per-leaf path would (bucket overflow; on the jnp twin also the
-    under-k case the full top-k handles by padding with real indices).
+    Single-arena wrapper over ``multi_select`` (the ratio walk runs
+    vectorized with converged segments frozen, so each slot's final
+    threshold is bitwise the per-leaf loop's).
     """
-    mean, mx = stats if stats is not None else seg_stats(
-        x2d, geom, use_pallas=use_pallas, interpret=interpret)
-    k_vec = jnp.asarray(geom.seg_ks, jnp.int32)
-    count = functools.partial(seg_counts, x2d, geom, use_pallas=use_pallas,
-                              interpret=interpret)
-
-    r0 = jnp.full((geom.n_seg,), jnp.float32(1.0 - eps))
-    nnz0 = count(threshold_at(mean, mx, r0))
-
-    def cond(state):
-        ratio, nnz = state
-        return jnp.any((nnz < k_vec) & (ratio > 0.0))
-
-    def body(state):
-        ratio, nnz = state
-        active = (nnz < k_vec) & (ratio > 0.0)
-        ratio = jnp.where(active, ratio - eps, ratio)
-        cnt = count(threshold_at(mean, mx, ratio))
-        return ratio, jnp.where(active, cnt, nnz)
-
-    ratio, nnz = jax.lax.while_loop(cond, body, (r0, nnz0))
-    thr = threshold_at(mean, mx, ratio)
-
-    caps, cap_max = _caps(geom, geom.block)
-    vals, idx, cnts = _seg_buckets(x2d, geom, thr, cap_max,
-                                   use_pallas=use_pallas,
-                                   interpret=interpret)
-
-    out: list[Selected] = []
-    for s, ((row0, row1), k, n, cap) in enumerate(
-            zip(geom.seg_rows, geom.seg_ks, geom.seg_sizes, caps)):
-        si, sv = _gather_topk_from_buckets(
-            vals[row0:row1, :cap], idx[row0:row1, :cap], k, n,
-            order_by_magnitude=True)
-        overflow = jnp.any(cnts[row0:row1] > cap)
-        if use_pallas:
-            # mirror ops.trimmed_topk: exact fallback on overflow only
-            fallback = overflow
-
-            def exact(_, s=s, k=k):
-                from repro.core.selection import exact_topk
-                e = exact_topk(_slot_flat(x2d, geom, s), k)
-                return e.indices, e.values
-        else:
-            # mirror selection.trimmed_topk (no buckets at all): the full
-            # top-k pads with real zero-score indices when nnz < k
-            fallback = overflow | (nnz[s] < k)
-
-            def exact(_, s=s, k=k, t=thr[s]):
-                from repro.core.selection import _pad_topk
-                flat = _slot_flat(x2d, geom, s)
-                score = jnp.where(jnp.abs(flat) > t, jnp.abs(flat), 0.0)
-                e = _pad_topk(flat, score, k)
-                return e.indices, e.values
-
-        si, sv = jax.lax.cond(fallback, exact,
-                              lambda _, si=si, sv=sv: (si, sv),
-                              operand=None)
-        out.append(Selected(si, sv, jnp.int32(k)))
-    return out
+    spec = SegmentSpec(alg="trimmed", eps=eps)
+    ((sel, _thr),) = multi_select([(x2d, geom, spec, stats)],
+                                  use_pallas=use_pallas, interpret=interpret)
+    return sel
 
 
 def threshold_bsearch_segments(
@@ -470,70 +748,25 @@ def threshold_bsearch_segments(
     stats: tuple[jax.Array, jax.Array] | None = None,
     refresh: jax.Array | None = None,
     cached: jax.Array | None = None,
+    warm: bool = False,
+    strides: tuple[int, ...] = (),
+    capacities: tuple[int, ...] = (),
 ) -> tuple[list[Selected], jax.Array]:
-    """Algorithm 3 over every slot of one arena (capacity == 2 k_i each).
+    """Algorithm 3 over every slot of one arena (capacity == 2 k_i each
+    unless ``capacities`` overrides, e.g. the sampled selector's
+    tolerance headroom).
 
-    ``refresh``/``cached`` implement the §5.2.2 sampled variant: segments
+    ``refresh``/``cached`` implement §5.2.2 threshold reuse (segments
     with ``refresh[s] == False`` skip the bisect entirely and filter at
-    ``cached[s]``. Returns the per-slot selections and the per-segment
-    thresholds used (the new ``LeafState.threshold`` cache).
+    ``cached[s]``); ``warm`` seeds refreshing segments' brackets from
+    ``cached``; ``strides`` turns on sampled counting. Single-arena
+    wrapper over ``multi_select``. Returns the per-slot selections and
+    the per-segment thresholds used (the new ``LeafState.threshold``
+    cache).
     """
-    mean, mx = stats if stats is not None else seg_stats(
-        x2d, geom, use_pallas=use_pallas, interpret=interpret)
-    k_vec = jnp.asarray(geom.seg_ks, jnp.int32)
-    two_k = 2 * k_vec
-    count = functools.partial(seg_counts, x2d, geom, use_pallas=use_pallas,
-                              interpret=interpret)
-    if refresh is None:
-        refresh = jnp.ones((geom.n_seg,), bool)
-
-    def searching(l, r, nnz):
-        done = (nnz >= k_vec) & (nnz <= two_k)
-        return refresh & ~done & ((r - l) > eps)
-
-    def cond(state):
-        l, r, nnz = state
-        return jnp.any(searching(l, r, nnz))
-
-    def body(state):
-        l, r, nnz = state
-        active = searching(l, r, nnz)
-        ratio = bisect_midpoint(l, r)
-        cnt = count(threshold_at(mean, mx, ratio))
-        nnz = jnp.where(active, cnt, nnz)
-        r = jnp.where(active & (cnt < k_vec), ratio, r)
-        l = jnp.where(active & (cnt > two_k), ratio, l)
-        return l, r, nnz
-
-    l, r, _ = jax.lax.while_loop(
-        cond, body, (jnp.zeros((geom.n_seg,), jnp.float32),
-                     jnp.ones((geom.n_seg,), jnp.float32),
-                     jnp.full((geom.n_seg,), -1, jnp.int32)))
-    thr = threshold_at(mean, mx, bisect_midpoint(l, r))
-    if cached is not None:
-        thr = jnp.where(refresh, thr, cached)
-
-    nnz = count(thr)
-    caps, cap_max = _caps(geom, geom.block)
-    vals, idx, cnts = _seg_buckets(x2d, geom, thr, cap_max,
-                                   use_pallas=use_pallas,
-                                   interpret=interpret)
-
-    out: list[Selected] = []
-    for s, ((row0, row1), k, n, cap) in enumerate(
-            zip(geom.seg_rows, geom.seg_ks, geom.seg_sizes, caps)):
-        si, sv = _gather_topk_from_buckets(
-            vals[row0:row1, :cap], idx[row0:row1, :cap], 2 * k, n,
-            order_by_magnitude=False)
-        overflow = jnp.any(cnts[row0:row1] > cap)
-
-        def exact(_, s=s, k=k, t=thr[s]):
-            e = threshold_filter(_slot_flat(x2d, geom, s), t,
-                                 capacity=2 * k)
-            return e.indices, e.values
-
-        si, sv = jax.lax.cond(overflow, exact,
-                              lambda _, si=si, sv=sv: (si, sv),
-                              operand=None)
-        out.append(Selected(si, sv, jnp.minimum(nnz[s], 2 * k)))
-    return out, thr
+    spec = SegmentSpec(alg="bsearch", eps=eps, capacities=capacities,
+                       strides=strides, refresh=refresh, cached=cached,
+                       warm=warm)
+    ((sel, thr),) = multi_select([(x2d, geom, spec, stats)],
+                                 use_pallas=use_pallas, interpret=interpret)
+    return sel, thr

@@ -68,3 +68,44 @@ class TestSizeBasedPolicyAgreesWithCostModel:
         pol = SizeBasedPolicy()
         assert pol.compressor_for("", _leaf(nbytes)) == \
             _METHOD_COMPRESSOR[choose_method(nbytes)]
+
+
+class TestSampledSelectKnobs:
+    """The sampled-bsearch sizing helpers (§ the DGC-style estimator)."""
+
+    def test_tolerance_zero_or_negative_pins_exact(self):
+        from repro.core.cost_model import sample_stride, sampled_capacity
+        assert sample_stride(1000, 0.0) == 1
+        assert sample_stride(1000, -1.0) == 1
+        assert sampled_capacity(64, 0.0) == 128      # exactly 2k
+
+    def test_stride_power_of_two_and_capped(self):
+        from repro.core.cost_model import sample_stride
+        for k in (16, 100, 4096, 10 ** 6):
+            for tol in (0.1, 0.25, 0.5, 1.0):
+                s = sample_stride(k, tol)
+                assert s >= 1 and (s & (s - 1)) == 0, \
+                    f"stride {s} not a power of two"
+                assert s <= 1024                      # block cap
+        # the cap engages: a huge k at tol=1 wants k/4 but gets 1024
+        assert sample_stride(10 ** 7, 1.0) == 1024
+
+    def test_stride_monotone_in_tolerance(self):
+        from repro.core.cost_model import sample_stride
+        k = 4096
+        strides = [sample_stride(k, t) for t in (0.1, 0.2, 0.4, 0.8)]
+        assert strides == sorted(strides)
+
+    def test_capacity_headroom_formula(self):
+        from repro.core.cost_model import sampled_capacity
+        assert sampled_capacity(100, 0.5) == 200 + 100
+        assert sampled_capacity(7, 0.5) == 14 + 7
+        # ceil rounds partial headroom UP (never undersizes the wire)
+        assert sampled_capacity(3, 0.1) == 6 + 1
+
+    def test_sampled_cost_below_exact_cost(self):
+        from repro.core.cost_model import t_select_sampled
+        m, density = 10 ** 7, 0.001
+        exact = t_select_sampled(m, density, 0.0)
+        sampled = t_select_sampled(m, density, 0.5)
+        assert sampled < exact

@@ -97,6 +97,208 @@ class TestQuantized:
         got = np.asarray(s.values)[np.asarray(s.indices) < x.size]
         np.testing.assert_allclose(got, expect, rtol=1e-5)
 
+    def test_mean_is_pinned(self):
+        """The quantized mean routes through pinned_sum/mean_of_sum, so
+        it is BITWISE the pinned computation — not whatever partial-sum
+        order jnp.sum picks in a given graph shape."""
+        x = _vec(1024, seed=4)
+        k, phase = 16, jnp.int32(0)
+        s = sel.threshold_binary_search_quant(x, k, phase)
+        valid = np.asarray(s.indices) < x.size
+        # reconstruct the pinned mean from the selected RAW values
+        raw_vals = jnp.where(jnp.asarray(valid),
+                             jnp.asarray(x)[jnp.asarray(s.indices) % x.size],
+                             0.0)
+        total = sel.pinned_sum(raw_vals)
+        mean = sel.mean_of_sum(total, jnp.maximum(s.count, 1))
+        got = np.asarray(s.values)[valid]
+        assert np.all(got == np.float32(mean)), \
+            "quantized mean is not the pinned sum/mean computation"
+
+    def test_mean_stable_across_graph_shapes(self):
+        """Same selection embedded in different jit graphs must produce
+        the identical mean bit pattern (the jnp.sum regression this
+        pins: reduce splitting varied with surrounding fusion)."""
+        from repro.core.selection import Selected
+        x = _vec(2048, seed=5)
+        k, phase = 8, jnp.int32(1)
+
+        def plain(v):
+            return sel.threshold_binary_search_quant(v, k, phase)
+
+        def fused_context(v):
+            s = sel.threshold_binary_search_quant(v * 1.0, k, phase)
+            return Selected(s.indices, s.values + 0.0, s.count, s.overflow)
+
+        a = jax.jit(plain)(x)
+        b = jax.jit(fused_context)(x)
+        np.testing.assert_array_equal(np.asarray(a.values),
+                                      np.asarray(b.values))
+
+
+class TestThresholdShortCircuit:
+    """The dead re-search bugfix: a caller-supplied ``threshold=`` must
+    short-circuit straight to the filter — no bisection traced at all."""
+
+    def test_no_search_traced_with_threshold(self):
+        x = _vec(4096, seed=5)
+        jaxpr = jax.make_jaxpr(
+            lambda v, t: sel.threshold_binary_search(v, 16, threshold=t)
+        )(x, jnp.float32(0.7))
+        prims = {e.primitive.name for e in jaxpr.jaxpr.eqns}
+        assert "while" not in prims, \
+            "threshold= path still traces the bisection loop"
+        # and the cold path DOES trace it (the check is meaningful)
+        cold = jax.make_jaxpr(
+            lambda v: sel.threshold_binary_search(v, 16))(x)
+        assert "while" in {e.primitive.name for e in cold.jaxpr.eqns}
+
+    def test_threshold_path_is_the_filter(self):
+        x = _vec(2048, seed=6)
+        k, thr = 16, jnp.float32(0.9)
+        s, t_out = sel.threshold_binary_search(x, k, threshold=thr)
+        ref = sel.threshold_filter(x, thr, capacity=2 * k)
+        assert float(t_out) == float(thr)
+        np.testing.assert_array_equal(np.asarray(s.indices),
+                                      np.asarray(ref.indices))
+        np.testing.assert_array_equal(np.asarray(s.values),
+                                      np.asarray(ref.values))
+        assert int(s.count) == int(ref.count)
+
+
+class TestLadderPinning:
+    """Alg 2's ratio ladder is pinned as (integer step x eps): the f32
+    running subtraction it replaces accumulates error and leaves a
+    spurious near-zero rung at the bottom."""
+
+    def test_final_rung_exactly_zero(self):
+        # the bug being pinned: sequential f32 subtraction misses 0.0
+        r = np.float32(1.0)
+        for _ in range(5):
+            r = np.float32(r - np.float32(0.2))
+        assert r != np.float32(0.0)
+        # the pinned ladder hits it exactly, so the eps=0.2 ladder has
+        # exactly 5 rungs — no 6th near-zero iteration
+        assert float(sel.ladder_ratio(jnp.int32(5), 0.2)) == 0.0
+        assert float(sel.ladder_ratio(jnp.int32(4), 0.2)) > 0.0
+
+    def test_first_rung_value_unchanged(self):
+        # rung 1 must stay bitwise what the old `1 - eps` init computed
+        assert np.float32(sel.ladder_ratio(jnp.int32(1), 0.2)) == \
+            np.float32(1.0) - np.float32(0.2)
+
+    def test_ladder_exhaustion_still_selects_k(self):
+        # nnz(|x| > mean) < k forces the walk to the exact-zero rung
+        x = jnp.asarray(np.r_[np.full(4, 5.0), np.zeros(1020)]
+                        .astype(np.float32))
+        s = sel.trimmed_topk(x, 8)
+        assert int(s.count) == 8
+
+
+class TestThresholdFilterOverflow:
+    """Pinned overflow semantics when nnz(|x| > t) > capacity: the first
+    ``capacity`` survivors in INDEX order are kept (lowest indices win,
+    not largest magnitudes), count saturates, and ``overflow`` is set."""
+
+    def test_overflow_keeps_first_capacity_lowest_indices(self):
+        x = jnp.asarray(np.linspace(1.0, 2.0, 100).astype(np.float32))
+        s = sel.threshold_filter(x, jnp.float32(0.5), capacity=16)
+        assert bool(s.overflow)
+        assert int(s.count) == 16
+        assert list(map(int, s.indices)) == list(range(16))
+
+    def test_nnz_above_2k_after_search(self):
+        # eps-exhausted bisection can exit with nnz > 2k: a spike train
+        # of identical magnitudes is indivisible by any threshold
+        k = 4
+        x = jnp.asarray(np.r_[np.full(64, 3.0), np.zeros(960)]
+                        .astype(np.float32))
+        s, thr = sel.threshold_binary_search(x, k)
+        assert bool(s.overflow)
+        assert int(s.count) == 2 * k
+        assert list(map(int, s.indices)) == list(range(2 * k))
+
+    def test_no_overflow_flag_clear(self):
+        s = sel.threshold_filter(_vec(100), jnp.float32(100.0), capacity=8)
+        assert not bool(s.overflow)
+        assert int(s.count) == 0
+
+
+class TestWarmStartedBisection:
+    def test_warm_accepts_converged_threshold(self):
+        x = _vec(20000, seed=8)
+        k = 128
+        s, thr = sel.threshold_binary_search(x, k)
+        s2, thr2 = sel.threshold_binary_search(x, k, warm=thr)
+        # the converged threshold is in band -> accepted verbatim
+        assert float(thr2) == float(thr)
+        np.testing.assert_array_equal(np.asarray(s2.indices),
+                                      np.asarray(s.indices))
+
+    def test_warm_zero_bitwise_cold(self):
+        # warm=0 probes nnz(|x| > 0) >> 2k and seeds bracket (0, 1) --
+        # bitwise the cold loop's iterate sequence
+        x = _vec(8192, seed=9)
+        k = 16
+        s_cold, thr_cold = sel.threshold_binary_search(x, k)
+        s_warm, thr_warm = sel.threshold_binary_search(
+            x, k, warm=jnp.float32(0.0))
+        assert float(thr_warm) == float(thr_cold)
+        np.testing.assert_array_equal(np.asarray(s_warm.indices),
+                                      np.asarray(s_cold.indices))
+
+    def test_warm_out_of_band_still_lands_in_band(self):
+        x = _vec(30000, seed=10)
+        k = 64
+        # a stale warm threshold way too high (nnz < k -> bracket below)
+        s, _ = sel.threshold_binary_search(x, k, warm=jnp.float32(3.5))
+        assert k <= int(s.count) <= 2 * k
+        top = set(map(int, sel.exact_topk(x, k).indices))
+        got = set(map(int, np.asarray(s.indices)[: int(s.count)]))
+        assert top <= got
+
+
+class TestSampledSearch:
+    def test_tolerance_zero_bitwise_exact(self):
+        x = _vec(50000, seed=11)
+        k = 100
+        s, thr = sel.threshold_binary_search(x, k)
+        ss, thr_s = sel.sampled_threshold_search(x, k, stride=1,
+                                                 capacity=2 * k)
+        assert float(thr_s) == float(thr)
+        np.testing.assert_array_equal(np.asarray(ss.indices),
+                                      np.asarray(s.indices))
+        np.testing.assert_array_equal(np.asarray(ss.values),
+                                      np.asarray(s.values))
+
+    @pytest.mark.parametrize("stride", [2, 4, 16])
+    def test_sampled_selects_exact_filter_set(self, stride):
+        """Whatever threshold the subsample search lands on, the emitted
+        set is the EXACT filter at that threshold (selection error comes
+        only from the threshold estimate, never the filter)."""
+        x = _vec(40000, seed=12)
+        k = 100
+        cap = 2 * k + k  # tolerance headroom
+        s, thr = sel.sampled_threshold_search(x, k, stride=stride,
+                                              capacity=cap)
+        ref = sel.threshold_filter(x, thr, capacity=cap)
+        np.testing.assert_array_equal(np.asarray(s.indices),
+                                      np.asarray(ref.indices))
+        assert int(s.count) == int(ref.count)
+
+    def test_sampled_stats_use_subsample(self):
+        """The mean/max feeding the search come from x[::stride] — the
+        documented estimator, pinned so the segmented twin can match it
+        bitwise."""
+        x = _vec(4096, seed=13)
+        stride = 4
+        sub = np.asarray(x)[::stride]
+        axs = jnp.abs(jnp.asarray(sub))
+        # degenerate warm: accept iff in band at the subsample count
+        _, thr = sel.sampled_threshold_search(x, 8, stride=stride,
+                                              capacity=32)
+        assert 0.0 <= float(thr) <= float(jnp.max(axs))
+
 
 def test_jit_compatible():
     x = _vec(2048)
